@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import os
+import time
+
+
+def emit(rows, header, name):
+    """Print `name,us_per_call,derived` style CSV and save a copy under
+    experiments/."""
+    os.makedirs("experiments", exist_ok=True)
+    path = os.path.join("experiments", f"{name}.csv")
+    lines = [",".join(header)] + [",".join(str(v) for v in r) for r in rows]
+    text = "\n".join(lines)
+    print(f"--- {name} ---")
+    print(text)
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    return path
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (CPU reference numbers)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

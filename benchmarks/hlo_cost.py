@@ -1,0 +1,3 @@
+"""Re-export: the trip-count-aware HLO cost analyzer lives in the library
+(repro.launch.hlo_cost) so the dry run can embed its results in artifacts."""
+from repro.launch.hlo_cost import analyze, parse_module  # noqa: F401

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the numbers time the pure-jnp reference paths (the
+Pallas kernels execute only under interpret=True, whose timing is
+meaningless); the derived column reports achieved GB/s or GFLOP/s so the
+CPU baseline is comparable against the analytic v5e roofline targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from benchmarks.common import emit, time_call
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fim_diag: memory-bound; bytes = B*D*4 read + 2*D*4
+    for B, D in [(256, 65536), (64, 262144)]:
+        g = jax.random.normal(key, (B, D), jnp.float32)
+        old = jnp.zeros((D,), jnp.float32)
+        fn = jax.jit(lambda g, o: ref.fim_diag_ref(g, o, 0.9))
+        us = time_call(fn, g, old)
+        gbps = (B * D * 4 + 2 * D * 4) / (us * 1e-6) / 1e9
+        rows.append([f"fim_diag_B{B}_D{D}", round(us, 1), f"{gbps:.2f}GB/s"])
+
+    # vlbfgs gram: memory-bound over (2m+1)*D
+    for n, D in [(21, 1_048_576)]:
+        basis = jax.random.normal(key, (n, D), jnp.float32)
+        fn = jax.jit(ref.vlbfgs_gram_ref)
+        us = time_call(fn, basis)
+        gbps = n * D * 4 / (us * 1e-6) / 1e9
+        rows.append([f"vlbfgs_gram_n{n}_D{D}", round(us, 1), f"{gbps:.2f}GB/s"])
+
+    # flash attention ref: compute-bound
+    for B, H, KV, S, hd in [(1, 8, 2, 1024, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+        fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+        us = time_call(fn, q, k, v)
+        flops = 4 * B * H * S * S * hd
+        rows.append([f"flash_ref_B{B}H{H}S{S}", round(us, 1),
+                     f"{flops / (us * 1e-6) / 1e9:.2f}GFLOP/s"])
+
+    return emit(rows, ["name", "us_per_call", "derived"], "kernels_bench")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table V reproduction: accuracy vs number of clients K (constant total
+data, so more clients = fewer samples each)."""
+from __future__ import annotations
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.fed.server import FederatedRun
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    mcfg = reduced(FMNIST_CNN) if quick else FMNIST_CNN
+    train, test = make_classification(
+        mcfg, n_train=1600 if quick else 6000, n_test=400, seed=0, noise=1.2)
+    rows = []
+    rounds = 8 if quick else 40
+    for K in ((16, 64) if quick else (100, 1000)):
+        for alg in ("fedavg_sgd", "fedova"):
+            fcfg = FedConfig(num_clients=K, participation=0.2,
+                             local_epochs=2 if quick else 5, batch_size=8,
+                             rounds=rounds, noniid_l=2, learning_rate=0.05,
+                             seed=0)
+            r = FederatedRun(mcfg, fcfg, train, test, alg)
+            hist = r.run(rounds=rounds, eval_every=rounds // 2)
+            rows.append([K, alg, round(max(h.get("accuracy", 0) for h in hist), 4)])
+    return emit(rows, ["num_clients", "scheme", "accuracy"], "table5_clients")
+
+
+if __name__ == "__main__":
+    run()

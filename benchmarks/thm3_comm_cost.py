@@ -1,0 +1,51 @@
+"""Theorem 3 validation: measured communication per round and total bytes
+to reach the target accuracy, for Algorithm 1 vs FedAvg — under both the
+star topology (server link, O(k·d)) and in-network tree aggregation
+(O(d·log τ), the reading under which Theorem 3's bound holds and the
+analogue of the TPU all-reduce).  Also runs the beyond-paper int8
+stochastic-rounding upload compression (related-work axis [27], [28]).
+"""
+from __future__ import annotations
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.fed.server import FederatedRun
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    mcfg = reduced(FMNIST_CNN)
+    train, test = make_classification(mcfg, n_train=1500, n_test=400,
+                                      seed=0, noise=1.2)
+    target = 0.55
+    rounds_cap = 16 if quick else 40
+    rows = []
+    for alg, compress in (("fim_lbfgs", "none"), ("fim_lbfgs", "int8"),
+                          ("fedavg_sgd", "none")):
+        fcfg = FedConfig(num_clients=20, participation=0.25, local_epochs=1,
+                         batch_size=10_000, rounds=rounds_cap, noniid_l=3,
+                         learning_rate=0.05, compress=compress, seed=0)
+        r = FederatedRun(mcfg, fcfg, train, test, alg)
+        hist = r.run(rounds=rounds_cap, eval_every=4, target_accuracy=target)
+        hits = [h["round"] for h in hist if h.get("accuracy", 0) >= target]
+        rounds_to = hits[0] if hits else rounds_cap
+        s = r.ledger.summary()
+        rows.append([
+            f"{alg}+{compress}" if compress != "none" else alg,
+            rounds_to,
+            round(s["up_star_MB_per_round"], 3),
+            round(s["up_tree_MB_per_round"], 3),
+            round(s["scalar_KB_per_round"], 3),
+            round(s["up_star_MB_per_round"] * rounds_to, 2),
+            round(s["up_tree_MB_per_round"] * rounds_to, 2),
+        ])
+    return emit(rows, ["scheme", "rounds_to_target", "up_star_MB_per_round",
+                       "up_tree_MB_per_round", "gram_scalar_KB_per_round",
+                       "total_star_MB", "total_tree_MB"],
+                "thm3_comm_cost")
+
+
+if __name__ == "__main__":
+    run()

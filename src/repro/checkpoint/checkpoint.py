@@ -1,0 +1,60 @@
+"""npz-based pytree checkpointing (no orbax in this environment).
+
+Leaves are stored under their '/'-joined tree path; restore rebuilds into a
+caller-supplied template (so dtypes/shardings are re-imposed by the caller's
+device_put).  Atomic via temp-file rename."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree) -> None:
+    flat, _ = _flatten(tree)
+    # numpy can't serialize ml_dtypes (bfloat16 etc.) — store as a raw
+    # uint16/uint8 view; restore() re-imposes the template dtype anyway.
+    for k, v in list(flat.items()):
+        if v.dtype.kind not in "biufc":  # e.g. bfloat16
+            flat[k] = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+            flat["__viewdtype__/" + k] = np.str_(str(v.dtype))
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def restore(path: str, template):
+    data = np.load(path)
+    flat, treedef = _flatten(template)
+    missing = set(flat) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint {path} missing keys: {sorted(missing)[:5]}...")
+    tmpl_leaves = jax.tree_util.tree_leaves(template)
+    restored = []
+    for k, t in zip(flat, tmpl_leaves):
+        v = data[k]
+        meta = "__viewdtype__/" + k
+        if meta in data.files:
+            import ml_dtypes  # noqa: F401 — registers the dtype names
+            v = v.view(np.dtype(str(data[meta])))
+        restored.append(np.asarray(v).astype(t.dtype).reshape(t.shape))
+    return jax.tree_util.tree_unflatten(treedef, restored)

@@ -1,0 +1,4 @@
+"""The paper's contribution: FIM-based approximate L-BFGS (Algorithm 1) and
+the FedOVA training scheme (Algorithm 2), plus the baselines it is compared
+against (Table II)."""
+from repro.core import aggregation, baselines, fedova, fim, fim_lbfgs, lbfgs  # noqa: F401

@@ -1,0 +1,52 @@
+"""Federated aggregation rules.
+
+``weighted_mean`` is FedAvg's Eq. (1) (n_k/n weighting).  ``grouped_mean``
+is FedOVA's Eq. (11): component classifiers are aggregated only over the
+clients that actually trained them; groups with no contributors keep the
+previous server model.  Both operate on *stacked* client pytrees (leading
+client dim) so they jit and map directly onto mesh all-reduces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_mean(stacked_params, weights):
+    """stacked_params: pytree with leading K dim; weights: (K,) ≥ 0."""
+    w = weights.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(w), 1e-12)
+
+    def leaf(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (jnp.sum(x.astype(jnp.float32) * wb, axis=0) / total).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked_params)
+
+
+def grouped_mean(prev_params, stacked_params, contributed):
+    """FedOVA Eq. (11).
+
+    prev_params: server pytree; stacked_params: (K, ...) client results;
+    contributed: (K,) float mask (1 where the client trained this group).
+    Returns the mean over contributors, or prev where no one contributed."""
+    c = contributed.astype(jnp.float32)
+    total = jnp.sum(c)
+
+    def leaf(prev, x):
+        cb = c.reshape((-1,) + (1,) * (x.ndim - 1))
+        mean = jnp.sum(x.astype(jnp.float32) * cb, axis=0) / jnp.maximum(total, 1.0)
+        return jnp.where(total > 0, mean.astype(prev.dtype), prev)
+
+    return jax.tree.map(leaf, prev_params, stacked_params)
+
+
+def delta_mean(global_params, stacked_client_params, weights):
+    """FedAvg in delta form: w + mean_k n_k/n (w_k - w) — identical to
+    weighted_mean when Σ n_k/n = 1 but numerically kinder in bf16."""
+    mean = weighted_mean(stacked_client_params, weights)
+    return jax.tree.map(
+        lambda g, m: (g.astype(jnp.float32)
+                      + (m.astype(jnp.float32) - g.astype(jnp.float32))).astype(g.dtype),
+        global_params, mean,
+    )

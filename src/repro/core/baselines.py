@@ -1,0 +1,127 @@
+"""The paper's comparison optimizers (Table II): FedAvg-SGD, FedAvg-Adam,
+FedDANE — implemented from scratch (no optax in this environment).
+
+All three share the federated contract of core/fim_lbfgs.py: the server is
+handed the client-aggregated gradient (FedAvg semantics — averaging one
+local step's update equals applying the averaged gradient) and returns new
+parameters.  FedDANE additionally prescribes the *client-side* corrected
+inner objective; ``feddane_inner_grad`` is applied by fed/client.py during
+local epochs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_axpy
+
+
+# ---------------------------------------------------------------------------
+# FedAvg-SGD
+# ---------------------------------------------------------------------------
+class SgdState(NamedTuple):
+    momentum: object
+    step: jax.Array
+
+
+def sgd_init(params, momentum: float = 0.0) -> SgdState:
+    return SgdState(
+        momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def sgd_update(state: SgdState, params, grad, lr: float, momentum: float = 0.0):
+    vel = jax.tree.map(
+        lambda v, g: momentum * v + g.astype(jnp.float32), state.momentum, grad
+    )
+    new_params = tree_axpy(-lr, vel, params)
+    return new_params, SgdState(vel, state.step + 1), {}
+
+
+# ---------------------------------------------------------------------------
+# FedAvg-Adam
+# ---------------------------------------------------------------------------
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    step: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(mu=z(), nu=z(), step=jnp.zeros((), jnp.int32))
+
+
+def adam_update(state: AdamState, params, grad, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grad)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grad)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    upd = jax.tree.map(
+        lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+    )
+    new_params = tree_axpy(-lr, upd, params)
+    return new_params, AdamState(mu, nu, t), {}
+
+
+# ---------------------------------------------------------------------------
+# FedDANE (Li et al., Asilomar 2019)
+# ---------------------------------------------------------------------------
+class DaneState(NamedTuple):
+    step: jax.Array
+
+
+def dane_init(params) -> DaneState:
+    return DaneState(step=jnp.zeros((), jnp.int32))
+
+
+def feddane_inner_grad(local_grad, local_grad_at_start, global_grad, params,
+                       start_params, mu: float):
+    """Gradient of the DANE local subproblem
+        F_k(w) - (∇F_k(w_t) - ∇f(w_t))·w + (μ/2)‖w - w_t‖²
+    i.e.  ∇F_k(w) - ∇F_k(w_t) + ∇f(w_t) + μ (w - w_t)."""
+    return jax.tree.map(
+        lambda g, g0, gg, w, w0: g - g0 + gg + mu * (w - w0).astype(g.dtype),
+        local_grad, local_grad_at_start, global_grad, params, start_params,
+    )
+
+
+def dane_update(state: DaneState, params, avg_client_params):
+    """Server step: average of clients' inner solutions."""
+    return avg_client_params, DaneState(state.step + 1), {}
+
+
+# ---------------------------------------------------------------------------
+# Uniform optimizer façade used by fed/server.py and launch/train.py
+# ---------------------------------------------------------------------------
+def make(name: str, params, fed_cfg):
+    """Returns (state, update_fn(state, params, grad, fim_diag) -> (params,
+    state, stats)).  FIM diag is ignored by the first-order baselines."""
+    from repro.core import fim_lbfgs
+
+    if name == "fim_lbfgs":
+        ocfg = fim_lbfgs.FimLbfgsConfig(
+            learning_rate=fed_cfg.second_order_lr, m=fed_cfg.lbfgs_m,
+            damping=fed_cfg.fim_damping, fim_ema=fed_cfg.fim_ema,
+            max_step_norm=fed_cfg.max_step_norm,
+        )
+        state = fim_lbfgs.init(params, ocfg)
+
+        def upd(state, params, grad, fim_diag):
+            return fim_lbfgs.update(state, params, grad, fim_diag, ocfg)
+
+        return state, upd
+    if name == "fedavg_sgd":
+        state = sgd_init(params)
+        return state, lambda s, p, g, f: sgd_update(s, p, g, fed_cfg.learning_rate)
+    if name == "fedavg_adam":
+        state = adam_init(params)
+        return state, lambda s, p, g, f: adam_update(s, p, g, fed_cfg.learning_rate)
+    raise ValueError(f"unknown optimizer {name!r}")

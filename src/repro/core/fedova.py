@@ -1,0 +1,92 @@
+"""FedOVA (paper Sec. IV-B, Algorithm 2).
+
+Decomposes an n-class federated classification task into n independent
+binary one-vs-all component classifiers:
+
+  * components are stored *stacked* (leading n_classes dim) so client-side
+    training vmaps across a client's locally-present classes and server-side
+    aggregation is one grouped reduction (Eq. 11);
+  * each client trains only the components whose class appears in its local
+    data (Step 2, "initializes some of the OVA component classifiers
+    according to its own local data label distribution");
+  * inference is arg-max over component confidences (Eq. 4).
+
+The scheme is optimizer-agnostic: components can be trained with local SGD
+(Alg. 2 as written) or with the FIM-L-BFGS server step (the paper's "can be
+well integrated with our communication efficient algorithm").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+
+class OvaModel(NamedTuple):
+    components: object   # pytree, leaves (n_classes, ...) — binary classifiers
+    n_classes: int
+
+
+def init(component_init, n_classes: int, key) -> OvaModel:
+    """component_init(key) -> params for ONE binary classifier."""
+    keys = jax.random.split(key, n_classes)
+    stacked = jax.vmap(component_init)(keys)
+    return OvaModel(components=stacked, n_classes=n_classes)
+
+
+def binary_labels(y, cls):
+    """Ground-truth membership for component ``cls``: 1 if y == cls."""
+    return (y == cls).astype(jnp.int32)
+
+
+def client_class_mask(y, n_classes: int):
+    """(n_classes,) float mask of classes present in a client's local data —
+    drives which components the client trains (Alg. 2 Step 2)."""
+    onehot = jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+    return (jnp.sum(onehot, axis=0) > 0).astype(jnp.float32)
+
+
+def predict(apply_fn, model: OvaModel, x):
+    """Eq. (4): ŷ = argmax_i f_i(x).  apply_fn(params, x) -> (B, 1) logit."""
+    logits = jax.vmap(lambda p: apply_fn(p, x))(model.components)  # (n, B, 1)
+    conf = jax.nn.sigmoid(logits[..., 0])                          # (n, B)
+    return jnp.argmax(conf, axis=0)
+
+
+def accuracy(apply_fn, model: OvaModel, x, y):
+    return jnp.mean(predict(apply_fn, model, x) == y)
+
+
+def add_class(model: OvaModel, component_init, key) -> OvaModel:
+    """Smooth adaptation to environment changes (paper Sec. IV-B Remark):
+    "when new classes emerge, FedOVA just needs to create a new classifier".
+    Appends a freshly-initialized component; existing experts untouched."""
+    new = component_init(key)
+    stacked = jax.tree.map(
+        lambda buf, n: jnp.concatenate([buf, n[None]], axis=0),
+        model.components, new,
+    )
+    return OvaModel(components=stacked, n_classes=model.n_classes + 1)
+
+
+def aggregate(model: OvaModel, client_components, client_masks) -> OvaModel:
+    """Eq. (11): per-component mean over contributing clients.
+
+    client_components: pytree with leaves (K, n_classes, ...);
+    client_masks: (K, n_classes) — which components each client trained."""
+    def per_class(cls_params_prev, cls_idx):
+        stacked = jax.tree.map(lambda l: l[:, cls_idx], client_components)
+        return aggregation.grouped_mean(
+            cls_params_prev, stacked, client_masks[:, cls_idx]
+        )
+
+    n = model.n_classes
+    new = [
+        per_class(jax.tree.map(lambda l: l[i], model.components), i)
+        for i in range(n)
+    ]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new)
+    return OvaModel(components=stacked, n_classes=n)

@@ -1,0 +1,120 @@
+"""FIM-based Approximate L-BFGS — the paper's Algorithm 1, as a composable
+optimizer.
+
+Round structure (server view):
+  1. aggregate client gradients  ḡ = (1/K)Σ ∇F_k      (one all-reduce, O(d))
+  2. aggregate client FIM diags  Γ̄ = (1/K)Σ Γ_k       (one all-reduce, O(d))
+  3. direction p_t = -H_t ḡ via vector-free two-loop    (O(m²) scalar comm)
+  4. ω_{t+1} = ω_t + η p_t;  s_t = η p_t
+  5. y_t = (Γ̄ + λI) s_t      — the FIM smoothing of Alg. 1 line 8; replaces
+     the unstable stochastic gradient difference of stochastic L-BFGS
+  6. push (s_t, y_t) unless the curvature test <s,y> ≥ ε‖s‖‖y‖ fails
+     (the guard that keeps Lemma 1's θ₁I ⪯ H_t ⪯ θ₂I in force)
+
+In the TPU mapping, steps 1-2 are the data/pod-axis collectives produced by
+batch sharding; steps 3-6 are elementwise/sharded and add only scalar
+collectives (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fim, lbfgs
+from repro.utils.pytree import tree_axpy, tree_dot, tree_norm
+
+
+class FimLbfgsConfig(NamedTuple):
+    learning_rate: float = 0.05
+    m: int = 10
+    damping: float = 1e-3
+    rel_damping: float = 0.1
+    fim_ema: float = 0.95
+    curvature_eps: float = 1e-8
+    max_step_norm: float = 0.0      # 0 disables step clipping
+    history_dtype: jnp.dtype = jnp.float32
+    state_dtype: jnp.dtype = jnp.float32  # Fisher EMA + s/y temporaries;
+                                          # bf16 at LLM scale (f32 copies of
+                                          # 132B params dominate collectives)
+
+
+class FimLbfgsState(NamedTuple):
+    history: lbfgs.History
+    fim: fim.FimState
+    step: jax.Array
+
+
+def init(params, cfg: FimLbfgsConfig) -> FimLbfgsState:
+    return FimLbfgsState(
+        history=lbfgs.init(params, cfg.m, dtype=cfg.history_dtype),
+        fim=fim.init(params, dtype=cfg.state_dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_axes(param_axes, cfg: FimLbfgsConfig) -> FimLbfgsState:
+    """Logical sharding axes for the optimizer state (history gets a leading
+    'history' axis; FIM diag shards exactly like the parameters)."""
+    hist = jax.tree.map(lambda a: ("history," + a) if a else "history", param_axes)
+    return FimLbfgsState(
+        history=lbfgs.History(s=hist, y=hist, idx="", count=""),
+        fim=fim.FimState(diag=param_axes, steps=""),
+        step="",
+    )
+
+
+def update(
+    state: FimLbfgsState,
+    params,
+    grad,
+    fim_diag,
+    cfg: FimLbfgsConfig,
+    learning_rate: Optional[jax.Array] = None,
+):
+    """One server round given aggregated ḡ and Γ̄. Returns (params, state, stats)."""
+    lr = cfg.learning_rate if learning_rate is None else learning_rate
+
+    fim_state = fim.update(state.fim, fim_diag, cfg.fim_ema)
+
+    # Alg. 1 line 6: p_t = -H_t ḡ  (vector-free two-loop).
+    p = lbfgs.direction(state.history, grad)
+
+    if cfg.max_step_norm:
+        # trust region on the actual step ||η p_t|| (not the raw direction)
+        pn = tree_norm(p) * lr
+        scale = jnp.minimum(1.0, cfg.max_step_norm / jnp.maximum(pn, 1e-12))
+    else:
+        scale = jnp.float32(1.0)
+
+    # Alg. 1 line 7: ω_{t+1} = ω_t + η p_t.  The step stays in the
+    # direction's dtype: a f32 copy of the full parameter vector would ride
+    # every ZeRO reshard at 2x bytes (observed on dbrx-132b).
+    s = jax.tree.map(
+        lambda pi: (lr * scale * pi.astype(jnp.float32)).astype(pi.dtype), p)
+    new_params = tree_axpy(1.0, s, params)
+
+    # Alg. 1 line 8: y_t = B̄_t s_t  with B̄ = Γ̄ + λI.
+    y = fim.smooth_y(fim_state, s, cfg.damping, cfg.rel_damping)
+
+    # Curvature safeguard (Lemma 1 bounds): skip degenerate pairs.
+    sy = tree_dot(s, y)
+    sn, yn = tree_norm(s), tree_norm(y)
+    ok = sy > cfg.curvature_eps * sn * yn
+
+    pushed = lbfgs.push(state.history, s, y)
+    history = jax.tree.map(
+        lambda new, old: jnp.where(ok, new, old) if new.ndim == 0 else
+        jnp.where(ok, new, old),
+        pushed, state.history,
+    )
+
+    stats = {
+        "dir_norm": tree_norm(p),
+        "step_norm": sn,
+        "sy": sy,
+        "pair_accepted": ok.astype(jnp.float32),
+        "grad_norm": tree_norm(grad),
+    }
+    return new_params, FimLbfgsState(history, fim_state, state.step + 1), stats

@@ -1,0 +1,1 @@
+from repro.fed import client, server, simulator  # noqa: F401

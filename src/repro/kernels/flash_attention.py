@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention with GQA,
+causal masking and optional sliding window.
+
+This is the TPU target for the backbone attention hot spot; the pure-jnp
+q-chunked scan in models/attention.py is the oracle-equivalent fallback the
+XLA:CPU dry run compiles.  Design points (TPU adaptation, DESIGN.md §3):
+
+  * grid = (B*H, num_q_blocks, num_kv_blocks), kv minor so the f32
+    accumulator / running-max / running-sum scratch stays in VMEM across the
+    kv sweep of one q block;
+  * GQA without materializing repeated K/V: the kv BlockSpec index map folds
+    the query head to its kv head (b*KV + h//G) — K/V tiles are fetched once
+    per kv head group;
+  * fully-masked blocks (above the causal diagonal, or outside the sliding
+    window) are skipped with pl.when — for long_500k's window=4096 this is
+    what makes attention O(S·W) instead of O(S²);
+  * block sizes 128 align the MXU's 128x128 systolic tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLK_Q = 128
+BLK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, sq: int, sk: int, nk: int, causal: bool, window: int, scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * sq
+    k_start = ik * sk
+    # Block-level skip: causal => k block must start at/below q block end;
+    # sliding window => k block must end after (q_start - window).
+    live = True
+    if causal:
+        live = k_start <= q_start + sq - 1
+    if window:
+        live = jnp.logical_and(live, k_start + sk - 1 > q_start - window) if causal else (k_start + sk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (sq, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (sk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (sq, sk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        mask = jnp.ones((sq, sk), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (sq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    blk_q: int = BLK_Q, blk_k: int = BLK_K,
+                    interpret: bool = False):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    sq = min(blk_q, S)
+    sk = min(blk_k, S)
+    nq = pl.cdiv(S, sq)
+    nk = pl.cdiv(S, sk)
+    qf = q.reshape(B * H, S, hd)
+    kf = k.reshape(B * KV, S, hd)
+    vf = v.reshape(B * KV, S, hd)
+
+    def kv_row(bh):
+        return (bh // H) * KV + (bh % H) // G
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, sq=sq, sk=sk, nk=nk, causal=causal,
+                          window=window, scale=hd ** -0.5),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, sq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, sk, hd), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+            pl.BlockSpec((1, sk, hd), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, 1), jnp.float32),
+            pltpu.VMEM((sq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,48 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; elsewhere (this CPU container, and
+any platform without Mosaic) they execute in interpret mode when explicitly
+requested, otherwise fall back to the pure-jnp oracle in ref.py — identical
+semantics either way (tests sweep shapes/dtypes asserting allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fim_diag as _fim
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import vlbfgs as _vl
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fim_diag_update(grads, old_diag, ema, force_kernel: bool = False):
+    """Fused Γ update: ema*old + (1-ema)*mean_b g².  grads: (B, D)."""
+    if _on_tpu():
+        return _fim.fim_diag(grads, old_diag, ema)
+    if force_kernel:
+        return _fim.fim_diag(grads, old_diag, ema, interpret=True)
+    return ref.fim_diag_ref(grads, old_diag, ema)
+
+
+def vlbfgs_gram(basis, force_kernel: bool = False):
+    """(2m+1, D) basis -> (2m+1, 2m+1) Gram matrix."""
+    if _on_tpu():
+        return _vl.gram(basis)
+    if force_kernel:
+        return _vl.gram(basis, interpret=True)
+    return ref.vlbfgs_gram_ref(basis)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    force_kernel: bool = False):
+    """(B,H,S,hd) x (B,KV,S,hd) -> (B,H,S,hd)."""
+    if _on_tpu():
+        return _fa.flash_attention(q, k, v, causal=causal, window=window)
+    if force_kernel:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)

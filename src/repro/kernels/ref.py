@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fim_diag_ref(grads, old_diag, ema: float):
+    """grads: (B, D) per-example (or per-microbatch) gradients;
+    old_diag: (D,) f32 EMA state.  Returns ema*old + (1-ema)*mean(g²)."""
+    meansq = jnp.mean(jnp.square(grads.astype(jnp.float32)), axis=0)
+    return ema * old_diag.astype(jnp.float32) + (1.0 - ema) * meansq
+
+
+def vlbfgs_gram_ref(basis):
+    """basis: (n, D) rows [s_0..s_{m-1}, y_0..y_{m-1}, g].
+    Returns (n, n) Gram matrix in f32."""
+    b = basis.astype(jnp.float32)
+    return b @ b.T
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd); GQA by head folding.
+    f32 softmax; returns (B, H, S, hd) in q.dtype."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.reshape(B, KV, G, S, hd).astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qf, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry run sees 512 placeholder devices; tests/benches see 1 CPU.
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get
+from repro.launch import mesh as meshlib
+from repro.launch import hlo_cost
+from repro.launch import train as trainlib
+from repro.models import model as zoo
+from repro.models.layers import use_mesh
+from repro.utils import sharding as shd
+
+"""Multi-pod dry run (deliverable e).
+
+For every (architecture x input shape x mesh) combination, builds the real
+step function (train_step = one federated FIM-L-BFGS round; serve_step = one
+decode token; prefill = full-sequence forward), lowers it with
+ShapeDtypeStruct inputs against the production mesh, compiles, and records
+memory_analysis / cost_analysis / per-collective byte counts into a JSON
+artifact that benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+"""
+
+ARRAY_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+COLL_RE = re.compile(
+    r"=\s*([^=]*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+               "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+               "u64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in ARRAY_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-shape proxy;
+    '-done' ops are skipped so start/done pairs count once)."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in COLL_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes": out, "count": count,
+            "total_bytes": float(sum(out.values()))}
+
+
+def build_step(cfg, shape, optimizer: str, n_micro: int):
+    """Returns (step_fn, arg_shapes (tuple), arg_shardings (tuple), donate)."""
+    ocfg = trainlib.opt_config(cfg)
+    specs = zoo.input_specs(cfg, shape)
+    in_axes = zoo.input_axes(cfg, shape)
+
+    if shape.kind == "train":
+        params_s, axes, opt_s, opt_axes = trainlib.train_state_shapes(
+            cfg, ocfg, optimizer)
+        step = trainlib.make_train_step(cfg, ocfg, n_micro=n_micro,
+                                        optimizer=optimizer)
+        # donate params + optimizer state (aliased in-place update — the
+        # production trainer does the same; halves the residency)
+        return step, (params_s, opt_s, specs), (axes, opt_axes, in_axes), (0, 1)
+    if shape.kind == "prefill":
+        params_s, axes = trainlib.abstract_params(cfg)
+        step = trainlib.make_prefill_step(cfg)
+        return step, (params_s, specs), (axes, in_axes), ()
+    # decode
+    params_s, axes = trainlib.abstract_params(cfg)
+    cache_s, cache_axes = trainlib.abstract_cache(
+        cfg, shape.global_batch, shape.seq_len)
+    step = trainlib.make_serve_step(cfg)
+    return (step, (params_s, cache_s, specs["token"]),
+            (axes, cache_axes, in_axes["token"]), (1,))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            optimizer: str = "fim_lbfgs", n_micro: int = 16) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = zoo.shape_variant(get(arch), shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "optimizer": optimizer, "family": cfg.family,
+           "attn_variant": cfg.attn_variant}
+
+    ok, reason = zoo.supports_shape(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    # §Perf finding (hillclimb a): a microbatch must shard evenly over the
+    # cohort (pod x data) axes or GSPMD pads/replicates it — observed 4.5x
+    # redundant per-chip FLOPs and 19x collective bytes on 2x16x16.  Pin the
+    # microbatch to one sequence per data shard.
+    data_shards = dict(mesh.shape).get("data", 1) * dict(mesh.shape).get("pod", 1)
+    if shape.kind == "train":
+        if cfg.train_n_micro:
+            n_micro = cfg.train_n_micro  # per-arch override (FSDP archs)
+        n_micro = max(1, min(n_micro, shape.global_batch // data_shards))
+        rec["n_micro"] = n_micro
+    t0 = time.time()
+    step, arg_shapes, arg_axes, donate = build_step(cfg, shape, optimizer, n_micro)
+
+    # arg 0 = params (TP sharding); arg 1 (train) = optimizer state, which
+    # additionally ZeRO-shards over the data axes (see utils/sharding.py).
+    in_shardings = []
+    for i, (s, a) in enumerate(zip(arg_shapes, arg_axes)):
+        rules = None
+        if shape.kind == "train" and i == 1:
+            rules = shd.OPT_RULES
+        elif i == 0 and cfg.fsdp:
+            rules = shd.PARAM_RULES_FSDP
+        in_shardings.append(shd.shardings_for_tree(s, a, mesh, rules))
+    in_shardings = tuple(in_shardings)
+    with use_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    if cost:
+        rec["flops"] = float(cost.get("flops", -1))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+    hlo_text = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo_text)
+    # trip-count-aware costs (XLA's cost_analysis counts while bodies ONCE —
+    # see repro/launch/hlo_cost.py; these are the roofline inputs)
+    rec["hlo_cost"] = hlo_cost.analyze(hlo_text)
+    rec["n_params"] = int(cfg.param_count())
+    rec["n_active_params"] = int(cfg.active_param_count())
+    rec["tokens"] = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    rec["kind"] = shape.kind
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+          f"flops {rec.get('flops', 0):.3g} "
+          f"coll {rec['collectives']['total_bytes']:.3g}B")
+    mem_str = str(mem) if mem is not None else "n/a"
+    print(f"  memory_analysis: {mem_str[:300]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--optimizer", default="fim_lbfgs")
+    ap.add_argument("--n-micro", type=int, default=16)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "2x16x16"]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.optimizer != "fim_lbfgs":
+                    tag += f"_{args.optimizer}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: exists, skipping")
+                    continue
+                try:
+                    rec = run_one(arch, shape, mp, args.optimizer, args.n_micro)
+                except Exception as e:  # noqa: BLE001 — record & continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""LLM-scale federated train/serve step factories + the runnable trainer.
+
+The train step is one *federated round* with the paper's Algorithm 1
+integrated as a first-class feature:
+
+  microbatch cohorts (gradient accumulation) play the client role —
+  each scan iteration computes a cohort gradient and its squared-gradient
+  Fisher term (core/fim.py "microbatch" mode), the accumulated means are the
+  server's ḡ and Γ̄ (the two O(d) all-reduces of Theorem 3, lowered from
+  batch sharding over the ("pod","data") axes), and core/fim_lbfgs.update
+  performs the VL-BFGS server step (the O(m²) scalar collectives).
+
+`--optimizer fedavg_sgd|fedavg_adam` swaps the server step for the paper's
+baselines, sharing the identical data path (that is the Table II comparison
+at LLM scale).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import baselines, fim, fim_lbfgs
+from repro.models import model as zoo
+from repro.utils.pytree import tree_add, tree_scale
+
+
+def opt_config(cfg: ArchConfig, learning_rate: float = 0.05) -> fim_lbfgs.FimLbfgsConfig:
+    return fim_lbfgs.FimLbfgsConfig(
+        learning_rate=learning_rate,
+        m=cfg.lbfgs_m,
+        damping=1e-2,
+        max_step_norm=1.0,
+        history_dtype=jnp.dtype(cfg.lbfgs_dtype),
+        # LLM-scale configs keep the Fisher EMA / step temporaries in the
+        # accumulation dtype (f32 full-param copies dominate collectives)
+        state_dtype=jnp.dtype(cfg.grad_accum_dtype),
+    )
+
+
+def make_train_step(cfg: ArchConfig, ocfg: fim_lbfgs.FimLbfgsConfig,
+                    n_micro: int = 4, optimizer: str = "fim_lbfgs"):
+    """(params, opt_state, batch) -> (params, opt_state, stats)."""
+
+    def train_step(params, opt_state, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        nm = min(n_micro, B)
+        micro = jax.tree.map(
+            lambda x: x.reshape((nm, B // nm) + x.shape[1:]), batch)
+
+        def cohort(carry, mb):
+            # Both accumulators share the GRADIENT's sharding — updating the
+            # (differently-sharded) Fisher EMA state per microbatch instead
+            # made GSPMD all-gather f32 diag slices per layer per microbatch
+            # (§Perf hillclimb b, iter 3: 589 GB/chip of f32 all-gather).
+            gsum, gsqsum, lsum = carry
+            (loss, _metrics), grad = jax.value_and_grad(
+                lambda p: zoo.loss_fn(p, cfg, mb), has_aux=True)(params)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grad)
+            gsqsum = jax.tree.map(
+                lambda a, g: a + jnp.square(g.astype(a.dtype)), gsqsum, grad)
+            return (gsum, gsqsum, lsum + loss), None
+
+        accum_dtype = jnp.dtype(cfg.grad_accum_dtype)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (gsum, gsqsum, lsum), _ = jax.lax.scan(
+            cohort, (zeros, zeros, jnp.zeros(())), micro)
+        grad = tree_scale(1.0 / nm, gsum)
+        fim_diag = tree_scale(1.0 / nm, gsqsum)  # mean of cohort g² = Γ̄
+
+        if optimizer == "fim_lbfgs":
+            new_params, new_state, stats = fim_lbfgs.update(
+                opt_state, params, grad, fim_diag, ocfg)
+        elif optimizer == "fedavg_adam":
+            new_params, new_state, stats = baselines.adam_update(
+                opt_state, params, grad, ocfg.learning_rate)
+        else:
+            new_params, new_state, stats = baselines.sgd_update(
+                opt_state, params, grad, ocfg.learning_rate)
+        stats = dict(stats)
+        stats["loss"] = lsum / nm
+        return new_params, new_state, stats
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return zoo.prefill_fn(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, token):
+        return zoo.decode_fn(params, cfg, cache, token)
+
+    return serve_step
+
+
+def init_train_state(cfg: ArchConfig, ocfg, key, optimizer: str = "fim_lbfgs"):
+    params, axes = zoo.init(cfg, key)
+    if optimizer == "fim_lbfgs":
+        opt_state = fim_lbfgs.init(params, ocfg)
+        opt_axes = fim_lbfgs.state_axes(axes, ocfg)
+    elif optimizer == "fedavg_adam":
+        opt_state = baselines.adam_init(params)
+        opt_axes = baselines.AdamState(mu=axes, nu=axes, step="")
+    else:
+        opt_state = baselines.sgd_init(params)
+        opt_axes = baselines.SgdState(momentum=axes, step="")
+    return params, axes, opt_state, opt_axes
+
+
+def abstract_params(cfg: ArchConfig):
+    """(ShapeDtypeStruct params tree, axes tree) without allocating anything:
+    run init under eval_shape, capturing the static axes via a side channel."""
+    captured = {}
+
+    def f(key):
+        p, a = zoo.init(cfg, key)
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return shapes, captured["axes"]
+
+
+def train_state_shapes(cfg: ArchConfig, ocfg, optimizer: str = "fim_lbfgs"):
+    """Abstract (params, axes, opt_state, opt_axes) for the dry run."""
+    params_s, axes = abstract_params(cfg)
+    if optimizer == "fim_lbfgs":
+        opt_s = jax.eval_shape(lambda p: fim_lbfgs.init(p, ocfg), params_s)
+        opt_axes = fim_lbfgs.state_axes(axes, ocfg)
+    elif optimizer == "fedavg_adam":
+        opt_s = jax.eval_shape(baselines.adam_init, params_s)
+        opt_axes = baselines.AdamState(mu=axes, nu=axes, step="")
+    else:
+        opt_s = jax.eval_shape(baselines.sgd_init, params_s)
+        opt_axes = baselines.SgdState(momentum=axes, step="")
+    return params_s, axes, opt_s, opt_axes
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, context: int):
+    """(ShapeDtypeStruct cache, axes) for serve_step dry runs."""
+    captured = {}
+
+    def f():
+        c, a = zoo.init_cache(cfg, batch, context)
+        captured["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, captured["axes"]

@@ -1,0 +1,163 @@
+"""Attention: GQA/MQA/MHA with RoPE, q-chunked online computation, optional
+sliding window, and KV-cache decode (ring buffer for sliding window).
+
+The training/prefill path is a ``lax.scan`` over query chunks so peak score
+memory is O(q_chunk * S) instead of O(S^2) — this is the pure-jnp analogue of
+the Pallas flash-attention kernel in ``repro/kernels/flash_attention.py``
+(which is the TPU target; XLA:CPU compiles this path for the dry run).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, constrain, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, stack: int | None = None):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    lead = (stack,) if stack else ()
+    pre = "layers," if stack else ""
+    params = {
+        "wq": dense_init(ks[0], lead + (d, cfg.num_heads * hd), cfg.activation_dtype),
+        "wk": dense_init(ks[1], lead + (d, cfg.num_kv_heads * hd), cfg.activation_dtype),
+        "wv": dense_init(ks[2], lead + (d, cfg.num_kv_heads * hd), cfg.activation_dtype),
+        "wo": dense_init(ks[3], lead + (cfg.num_heads * hd, d), cfg.activation_dtype),
+    }
+    axes = {
+        "wq": pre + "embed,qkv",
+        "wk": pre + "embed,qkv",
+        "wv": pre + "embed,qkv",
+        "wo": pre + "qkv,embed",
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones(lead + (hd,), cfg.activation_dtype)
+        params["k_norm"] = jnp.ones(lead + (hd,), cfg.activation_dtype)
+        axes["q_norm"] = pre + "head_dim"
+        axes["k_norm"] = pre + "head_dim"
+    return params, axes
+
+
+def _project_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch,seq,heads,head_dim")
+    k = constrain(k, "batch,seq,kv_heads,head_dim")
+    v = constrain(v, "batch,seq,kv_heads,head_dim")
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, cfg, positions, causal: bool):
+    """q:(B,S,H,hd) k,v:(B,S,KV,hd) -> (B,S,H,hd).
+
+    Scans over query chunks; each step attends the chunk against the full
+    (masked) key set with an explicit causal / sliding-window mask.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV  # query heads per kv head
+    chunk = min(cfg.attn_q_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nq = S // chunk
+    scale = hd ** -0.5
+    qs = q.reshape(B, nq, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    pos_q = positions.reshape(nq, chunk) if positions.ndim == 1 else None
+    pos_k = positions if positions.ndim == 1 else None
+
+    def step(_, inputs):
+        qc, pq = inputs  # (B,chunk,KV,G,hd), (chunk,)
+        scores = jnp.einsum("bckgh,bskh->bkgcs", qc.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32))
+        mask = jnp.ones((chunk, S), bool)
+        if causal:
+            mask &= pq[:, None] >= pos_k[None, :]
+        if cfg.attn_variant == "sliding_window":
+            mask &= pos_k[None, :] > (pq[:, None] - cfg.window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgcs,bskh->bckgh", probs, v.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(step, None, (qs, pos_q))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+
+
+def attn_apply(p, cfg, x, positions=None, causal: bool = True):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _chunked_attention(q, k, v, cfg, positions, causal)
+    out = out.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, W, KV, hd)
+    v: jax.Array        # (B, W, KV, hd)
+    pos: jax.Array      # () int32 — absolute position of the next token
+
+
+def cache_init(cfg, batch: int, window: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, window, cfg.num_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_axes() -> KVCache:
+    return KVCache(k="batch,window,kv_heads,head_dim",
+                   v="batch,window,kv_heads,head_dim", pos="")
+
+
+def attn_decode(p, cfg, x, cache: KVCache):
+    """One-token decode. x: (B, 1, d).  Ring-buffer write for sliding window;
+    for full attention the window equals the max context so the ring index is
+    just the position."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    W = cache.k.shape[1]
+    pos = cache.pos
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    slot = pos % W
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    KV = k.shape[2]
+    G = cfg.num_heads // KV
+    scale = hd ** -0.5
+    qh = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bckgh,bskh->bkgcs", qh.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))  # (B,KV,G,1,W)
+    # Ring-buffer validity: after writing position `pos`, the cache holds the
+    # last min(pos+1, W) positions.  Before the first wrap only slots
+    # 0..pos are populated; after wrapping every slot is live.
+    slots = jnp.arange(W)
+    valid = jnp.where(pos >= W, jnp.ones((W,), bool), slots <= pos)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskh->bckgh", probs, v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    y = jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    return y, KVCache(k=k, v=v, pos=pos + 1)

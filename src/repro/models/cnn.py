@@ -1,0 +1,95 @@
+"""The paper's experiment CNNs (Sec. VI-A), in plain JAX.
+
+Used by the federated runtime for the Table II-V / Fig 3-4 reproductions:
+multi-class softmax classifiers for FedAvg/FedDANE baselines and 1-logit
+binary component classifiers for FedOVA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import CNNConfig
+from repro.models.layers import dense_init
+
+
+def init(cfg: CNNConfig, key, dtype=jnp.float32):
+    params, axes = {}, {}
+    ch_in = cfg.input_shape[-1]
+    h, w = cfg.input_shape[:2]
+    ks = jax.random.split(key, len(cfg.conv_channels) + len(cfg.fc_units) + 1)
+    for i, ch in enumerate(cfg.conv_channels):
+        params[f"conv{i}"] = {
+            "w": dense_init(ks[i], (3, 3, ch_in, ch), dtype, in_axis=-2) / 3.0,
+            "b": jnp.zeros((ch,), dtype),
+        }
+        axes[f"conv{i}"] = {"w": "conv,conv,embed,mlp", "b": "mlp"}
+        ch_in = ch
+        h, w = -(-h // cfg.pool[0]), -(-w // cfg.pool[1])
+    feat = h * w * ch_in
+    for j, units in enumerate(cfg.fc_units):
+        params[f"fc{j}"] = {
+            "w": dense_init(ks[len(cfg.conv_channels) + j], (feat, units), dtype),
+            "b": jnp.zeros((units,), dtype),
+        }
+        axes[f"fc{j}"] = {"w": "embed,mlp", "b": "mlp"}
+        feat = units
+    params["out"] = {
+        "w": dense_init(ks[-1], (feat, cfg.num_classes), dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype),
+    }
+    axes["out"] = {"w": "embed,vocab", "b": "vocab"}
+    return params, axes
+
+
+def apply(params, cfg: CNNConfig, x):
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    for i in range(len(cfg.conv_channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, cfg.pool[0], cfg.pool[1], 1), (1, cfg.pool[0], cfg.pool[1], 1),
+            "SAME",
+        )
+    x = x.reshape(x.shape[0], -1)
+    for j in range(len(cfg.fc_units)):
+        p = params[f"fc{j}"]
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    p = params["out"]
+    return x @ p["w"] + p["b"]
+
+
+def softmax_loss(params, cfg: CNNConfig, batch):
+    """Multi-class CE (FedAvg-style training)."""
+    logits = apply(params, cfg, batch["x"]).astype(jnp.float32)
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def binary_loss(params, cfg: CNNConfig, batch):
+    """One-vs-all component loss: sigmoid BCE on 1-logit head.
+    batch["y"] in {0,1}: membership of the component's class."""
+    logits = apply(params, cfg, batch["x"]).astype(jnp.float32)[:, 0]
+    y = batch["y"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def accuracy(params, cfg: CNNConfig, x, y) -> jax.Array:
+    return jnp.mean(jnp.argmax(apply(params, cfg, x), axis=-1) == y)
+
+
+def per_example_loss_fn(cfg: CNNConfig, binary: bool = False):
+    """Single-example loss closure used by the exact per-example FIM path."""
+    loss = binary_loss if binary else softmax_loss
+
+    def f(params, x, y):
+        return loss(params, cfg, {"x": x[None], "y": y[None]})
+
+    return f

@@ -1,0 +1,208 @@
+"""Jamba-style hybrid stack: Mamba + attention at a 1:7 ratio, MoE every
+second FFN (arXiv:2403.19887).
+
+A *period* of 8 layers is structured as three identical "mm" blocks
+(mamba+dense-FFN, mamba+MoE-FFN) followed by one "ma" block
+(mamba+dense-FFN, attention+MoE-FFN) — preserving Jamba's layer census
+exactly (per 8 layers: 7 mamba, 1 attention, 4 MoE FFNs, 4 dense FFNs).
+Periods are stacked and scanned; the inner mm blocks are a nested scan, so
+HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.layers import constrain, dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+from repro.models.transformer import DecodeCache, _chunked_ce, logits_fn
+
+PERIOD = 8
+MM_PER_PERIOD = 3
+
+
+def _restack(tree, axes, P: int, inner: int):
+    """(P*inner, ...) stacked leaves -> (P, inner, ...), prefixing axes."""
+    return (
+        jax.tree.map(lambda x: x.reshape((P, inner) + x.shape[1:]), tree),
+        jax.tree.map(lambda a: "layers," + a, axes),
+    )
+
+
+def init_params(cfg, key):
+    assert cfg.num_layers % PERIOD == 0, "jamba stack needs multiples of 8 layers"
+    P = cfg.num_layers // PERIOD
+    d, dtype = cfg.d_model, cfg.activation_dtype
+    ks = jax.random.split(key, 16)
+
+    def norms(stack, n):
+        return jnp.ones((stack, d), dtype), "layers,embed"
+
+    mm_p, mm_a = {}, {}
+    for i, name in enumerate(("m1", "m2")):
+        mp, ma = mamba2.mamba_init(ks[i], cfg, stack=P * MM_PER_PERIOD)
+        mm_p[name], mm_a[name] = _restack(mp, ma, P, MM_PER_PERIOD)
+    fd, fda = mlp_init(ks[2], d, cfg.d_ff, dtype, stack=P * MM_PER_PERIOD)
+    mm_p["ffn_d"], mm_a["ffn_d"] = _restack(fd, fda, P, MM_PER_PERIOD)
+    fe, fea = moe.moe_init(ks[3], cfg, stack=P * MM_PER_PERIOD)
+    mm_p["ffn_e"], mm_a["ffn_e"] = _restack(fe, fea, P, MM_PER_PERIOD)
+    for n in ("ln_m1", "ln_f1", "ln_m2", "ln_f2"):
+        mm_p[n] = jnp.ones((P, MM_PER_PERIOD, d), dtype)
+        mm_a[n] = "layers,layers,embed"
+
+    ma_p, ma_a = {}, {}
+    ma_p["m"], ma_a["m"] = mamba2.mamba_init(ks[4], cfg, stack=P)
+    ma_p["ffn_d"], ma_a["ffn_d"] = mlp_init(ks[5], d, cfg.d_ff, dtype, stack=P)
+    ma_p["attn"], ma_a["attn"] = attn.attn_init(ks[6], cfg, stack=P)
+    ma_p["ffn_e"], ma_a["ffn_e"] = moe.moe_init(ks[7], cfg, stack=P)
+    for n in ("ln_m", "ln_f1", "ln_a", "ln_f2"):
+        ma_p[n] = jnp.ones((P, d), dtype)
+        ma_a[n] = "layers,embed"
+
+    params = {
+        "embed": embed_init(ks[8], (cfg.vocab_size, d), dtype),
+        "mm": mm_p,
+        "ma": ma_p,
+        "final_ln": jnp.ones((d,), dtype),
+        "head": dense_init(ks[9], (d, cfg.vocab_size), dtype),
+    }
+    axes = {
+        "embed": "vocab,embed",
+        "mm": mm_a,
+        "ma": ma_a,
+        "final_ln": "embed",
+        "head": "embed,vocab",
+    }
+    return params, axes
+
+
+def _mm_block(cfg, p, h, aux):
+    h = h + mamba2.mamba_apply(p["m1"], cfg, rms_norm(h, p["ln_m1"]))
+    h = h + mlp_apply(p["ffn_d"], rms_norm(h, p["ln_f1"]))
+    h = h + mamba2.mamba_apply(p["m2"], cfg, rms_norm(h, p["ln_m2"]))
+    out, (a, _) = moe.moe_apply(p["ffn_e"], cfg, rms_norm(h, p["ln_f2"]))
+    return h + out, aux + a
+
+
+def _ma_block(cfg, p, h, aux, positions):
+    h = h + mamba2.mamba_apply(p["m"], cfg, rms_norm(h, p["ln_m"]))
+    h = h + mlp_apply(p["ffn_d"], rms_norm(h, p["ln_f1"]))
+    h = h + attn.attn_apply(p["attn"], cfg, rms_norm(h, p["ln_a"]), positions, True)
+    out, (a, _) = moe.moe_apply(p["ffn_e"], cfg, rms_norm(h, p["ln_f2"]))
+    return h + out, aux + a
+
+
+def forward(params, cfg, tokens, positions=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch,seq,embed")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    def period_body(carry, scanned):
+        h, aux = carry
+        mm_p, ma_p = scanned
+
+        def mm_body(c, mp):
+            hh, aa = c
+            hh, aa = _mm_block(cfg, mp, hh, aa)
+            return (constrain(hh, "batch,seq,embed"), aa), None
+
+        mm_fn = jax.checkpoint(mm_body) if cfg.remat else mm_body
+        (h, aux), _ = jax.lax.scan(mm_fn, (h, aux), mm_p)
+        h, aux = _ma_block(cfg, ma_p, h, aux, positions)
+        return (constrain(h, "batch,seq,embed"), aux), None
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["mm"], params["ma"])
+    )
+    return rms_norm(x, params["final_ln"]), aux
+
+
+def lm_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    hidden, aux = forward(params, cfg, tokens)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])], axis=1
+    ).astype(jnp.float32)
+    ce = _chunked_ce(params, cfg, hidden, labels, mask)
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+class HybridCache(NamedTuple):
+    mm_m1: object   # (P, 3, ...) MambaState
+    mm_m2: object
+    ma_m: object    # (P, ...) MambaState
+    ma_kv: object   # (P, ...) KVCache
+    pos: jax.Array
+
+
+def init_cache(cfg, batch: int, context: int):
+    P = cfg.num_layers // PERIOD
+    window = min(cfg.window, context) if cfg.attn_variant == "sliding_window" else context
+    st = mamba2.state_init(cfg, batch)
+    stax = mamba2.state_axes()
+
+    def stack(x, lead):
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, lead + t.shape).copy(), x)
+
+    kv = attn.cache_init(cfg, batch, window, cfg.activation_dtype)
+    cache = HybridCache(
+        mm_m1=stack(st, (P, MM_PER_PERIOD)),
+        mm_m2=stack(st, (P, MM_PER_PERIOD)),
+        ma_m=stack(st, (P,)),
+        ma_kv=stack(kv, (P,)),
+        pos=jnp.zeros((), jnp.int32),
+    )
+    pre2 = jax.tree.map(lambda a: "layers,layers," + a, stax)
+    axes = HybridCache(
+        mm_m1=pre2, mm_m2=pre2,
+        ma_m=jax.tree.map(lambda a: "layers," + a, stax),
+        ma_kv=jax.tree.map(lambda a: ("layers," + a) if a else "layers", attn.cache_axes()),
+        pos="",
+    )
+    return cache, axes
+
+
+def decode_step(params, cfg, cache: HybridCache, token):
+    x = jnp.take(params["embed"], token, axis=0)  # (B,1,d)
+    pos = cache.pos
+
+    def period_body(h, scanned):
+        mm_p, ma_p, c_m1, c_m2, c_mam, c_kv = scanned
+
+        def mm_body(hh, inner):
+            mp, s1, s2 = inner
+            out, s1n = mamba2.mamba_decode(mp["m1"], cfg, rms_norm(hh, mp["ln_m1"]), s1)
+            hh = hh + out
+            hh = hh + mlp_apply(mp["ffn_d"], rms_norm(hh, mp["ln_f1"]))
+            out, s2n = mamba2.mamba_decode(mp["m2"], cfg, rms_norm(hh, mp["ln_m2"]), s2)
+            hh = hh + out
+            out, _ = moe.moe_apply(mp["ffn_e"], cfg, rms_norm(hh, mp["ln_f2"]))
+            return hh + out, (s1n, s2n)
+
+        h, (s1n, s2n) = jax.lax.scan(mm_body, h, (mm_p, c_m1, c_m2))
+        out, mam_n = mamba2.mamba_decode(ma_p["m"], cfg, rms_norm(h, ma_p["ln_m"]), c_mam)
+        h = h + out
+        h = h + mlp_apply(ma_p["ffn_d"], rms_norm(h, ma_p["ln_f1"]))
+        c_kv = c_kv._replace(pos=pos)
+        out, kv_n = attn.attn_decode(ma_p["attn"], cfg, rms_norm(h, ma_p["ln_a"]), c_kv)
+        kv_n = kv_n._replace(pos=kv_n.pos * 0)
+        h = h + out
+        out, _ = moe.moe_apply(ma_p["ffn_e"], cfg, rms_norm(h, ma_p["ln_f2"]))
+        return h + out, (s1n, s2n, mam_n, kv_n)
+
+    h, (m1, m2, mam, kv) = jax.lax.scan(
+        period_body, x,
+        (params["mm"], params["ma"], cache.mm_m1, cache.mm_m2, cache.ma_m, cache.ma_kv),
+    )
+    h = rms_norm(h, params["final_ln"])
+    logits = logits_fn(params, cfg, h)
+    return logits, HybridCache(m1, m2, mam, kv, pos + 1)

@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked scan + one-step decode.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the recurrence is
+evaluated as a masked quadratic form (MXU-friendly), across chunks a
+``lax.scan`` carries the (heads, state, head_dim) SSM state.  The scan keeps
+peak memory at O(B * heads * Q^2) per step regardless of sequence length,
+which is what makes the 500k-token decode/train shapes lowerable.
+
+Decode is the dual recurrent form: state <- exp(dt*A) * state + dt * B (x) x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import constrain, dense_init, rms_norm
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state
+
+
+def mamba_init(key, cfg, stack: int | None = None):
+    d = cfg.d_model
+    d_in, nh, N = _dims(cfg)
+    conv_ch = d_in + 2 * N  # x, B, C go through the depthwise conv
+    ks = jax.random.split(key, 5)
+    lead = (stack,) if stack else ()
+    pre = "layers," if stack else ""
+    params = {
+        # order: [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+        "in_proj": dense_init(ks[0], lead + (d, 2 * d_in + 2 * N + nh), cfg.activation_dtype),
+        "conv_w": (jax.random.normal(ks[1], lead + (cfg.ssm_conv, conv_ch)) * 0.1).astype(cfg.activation_dtype),
+        "A_log": jnp.zeros(lead + (nh,), jnp.float32),
+        "D": jnp.ones(lead + (nh,), jnp.float32),
+        "dt_bias": jnp.zeros(lead + (nh,), jnp.float32),
+        "norm": jnp.ones(lead + (d_in,), cfg.activation_dtype),
+        "out_proj": dense_init(ks[2], lead + (d_in, d), cfg.activation_dtype),
+    }
+    axes = {
+        "in_proj": pre + "embed,ssm_inner",
+        "conv_w": pre + "conv,ssm_inner",
+        "A_log": pre + "ssm_heads",
+        "D": pre + "ssm_heads",
+        "dt_bias": pre + "ssm_heads",
+        "norm": pre + "ssm_inner",
+        "out_proj": pre + "ssm_inner,embed",
+    }
+    return params, axes
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, nh, N = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w):
+    """Depthwise causal conv along seq. xBC: (B,S,ch); conv_w: (K,ch)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):  # K is 4: unrolled taps beat a conv op at this size.
+        # Correlation convention: conv_w[K-1] multiplies the current step —
+        # must match the decode window layout in mamba_decode.
+        out = out + pad[:, i:i + xBC.shape[1]].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xBC.dtype)
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # (B, nh, hd, N) f32
+    conv: jax.Array   # (B, K-1, conv_ch) — last K-1 conv inputs
+
+
+def state_init(cfg, batch: int) -> MambaState:
+    d_in, nh, N = _dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, nh, cfg.ssm_head_dim, N), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * N), jnp.float32),
+    )
+
+
+def state_axes() -> MambaState:
+    return MambaState(ssm="batch,ssm_heads,head_dim,ssm_state",
+                      conv="batch,conv,ssm_inner")
+
+
+def mamba_apply(p, cfg, x):
+    """Full-sequence SSD. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    d_in, nh, N = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    zxbcdt = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"])
+    xs = xBC[..., :d_in].reshape(B, S, nh, hd)
+    Bm = xBC[..., d_in:d_in + N].astype(jnp.float32)        # (B,S,N)
+    Cm = xBC[..., d_in + N:].astype(jnp.float32)            # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                # (nh,)
+    dA = dt * A                                             # (B,S,nh)
+
+    # chunk views
+    xs_c = xs.reshape(B, nc, Q, nh, hd).astype(jnp.float32)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+    dt_c = dt.reshape(B, nc, Q, nh)
+    dA_c = dA.reshape(B, nc, Q, nh)
+
+    def chunk_step(state, inp):
+        xs_q, B_q, C_q, dt_q, dA_q = inp   # (B,Q,nh,hd) (B,Q,N) (B,Q,N) (B,Q,nh) (B,Q,nh)
+        cs = jnp.cumsum(dA_q, axis=1)                        # (B,Q,nh)
+        total = cs[:, -1]                                    # (B,nh)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhdn,bqh->bqhd", C_q, state, jnp.exp(cs))
+        # intra-chunk masked quadratic form
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,Q,Q,nh) i,j
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bin,bjn->bij", C_q, B_q)[..., None] * decay  # (B,Q,Q,nh)
+        y_intra = jnp.einsum("bijh,bjh,bjhd->bihd", scores, dt_q, xs_q)
+        # state update: decay old state across the chunk + new outer products
+        carry_decay = jnp.exp(total)[:, :, None, None]
+        state_new = jnp.einsum("bqh,bqh,bqhd,bqn->bhdn",
+                               jnp.exp(total[:, None, :] - cs), dt_q, xs_q, B_q)
+        state = state * carry_decay + state_new
+        return state, (y_inter + y_intra)
+
+    state0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    swap = lambda t: jnp.swapaxes(t, 0, 1)  # scan over chunks
+    _, ys = jax.lax.scan(chunk_step, state0,
+                         (swap(xs_c), swap(B_c), swap(C_c), swap(dt_c), swap(dA_c)))
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, nh, hd)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * jax.nn.silu(z)
+    y = constrain(y, "batch,seq,ssm_inner")
+    return jnp.einsum("bsz,zd->bsd", y, p["out_proj"])
+
+
+def mamba_decode(p, cfg, x, state: MambaState):
+    """One-token decode. x: (B,1,d)."""
+    B = x.shape[0]
+    d_in, nh, N = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])[:, 0]  # (B, z)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv over the ring of the last K inputs
+    window = jnp.concatenate([state.conv, xBC[:, None].astype(jnp.float32)], axis=1)  # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32))
+    xBC_c = jax.nn.silu(conv_out)
+    xs = xBC_c[..., :d_in].reshape(B, nh, hd)
+    Bm = xBC_c[..., d_in:d_in + N]
+    Cm = xBC_c[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                          # (B,nh)
+
+    ssm = state.ssm * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xs, Bm)
+    y = jnp.einsum("bhdn,bn->bhd", ssm, Cm) + p["D"][None, :, None] * xs
+    y = y.reshape(B, d_in)
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bz,zd->bd", y, p["out_proj"])[:, None]
+    new_state = MambaState(ssm=ssm, conv=window[:, 1:])
+    return out, new_state

@@ -1,0 +1,116 @@
+"""Unified model API over all architecture families.
+
+    init(cfg, key)            -> (params, axes)
+    loss_fn(params, cfg, b)   -> (scalar, metrics)     [train shapes]
+    prefill_fn(params, cfg,b) -> hidden/logits         [prefill shapes]
+    init_cache(cfg, B, ctx)   -> (cache, cache_axes)   [decode shapes]
+    decode_fn(params,cfg,c,t) -> (logits, cache)
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of the given input-shape config — the dry-run lowers against
+these (no allocation).  Audio/VLM frontends are stubs: hubert receives frame
+embeddings (B, S, d_model), chameleon receives pre-quantized VQ token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import hybrid, transformer
+
+
+def is_hybrid(cfg: ArchConfig) -> bool:
+    return cfg.family == "hybrid"
+
+
+def init(cfg: ArchConfig, key):
+    return hybrid.init_params(cfg, key) if is_hybrid(cfg) else transformer.init_params(cfg, key)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return hybrid.lm_loss(params, cfg, batch) if is_hybrid(cfg) else transformer.loss_fn(params, cfg, batch)
+
+
+def prefill_fn(params, cfg: ArchConfig, batch):
+    """Full-sequence forward returning last-position logits (prefill / encode)."""
+    fwd = hybrid.forward if is_hybrid(cfg) else transformer.forward
+    inputs = batch.get("tokens", batch.get("features"))
+    hidden, _ = fwd(params, cfg, inputs)
+    if cfg.is_encoder:  # encode: per-frame logits
+        return transformer.logits_fn(params, cfg, hidden[:, -transformer.LOSS_CHUNK:])
+    return transformer.logits_fn(params, cfg, hidden[:, -1:])
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int):
+    return hybrid.init_cache(cfg, batch, context) if is_hybrid(cfg) else transformer.init_cache(cfg, batch, context)
+
+
+def decode_fn(params, cfg: ArchConfig, cache, token):
+    return hybrid.decode_step(params, cfg, cache, token) if is_hybrid(cfg) else transformer.decode_step(params, cfg, cache, token)
+
+
+# ---------------------------------------------------------------------------
+# input specs for the dry run
+# ---------------------------------------------------------------------------
+def supports_shape(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(supported, reason-if-not). Encoders have no decode; full-attention
+    archs run long_500k only via the sliding-window variant (handled by
+    shape_variant below)."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    return True, ""
+
+
+def shape_variant(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    """Per-shape config adjustments (documented in DESIGN.md):
+    - long_500k on full-attention archs -> sliding-window variant
+      (sub-quadratic; SSM/hybrid keep native recurrence for their mamba
+      layers, but their *attention* layers also ring-buffer at the window).
+    - decode paths never remat."""
+    cfg = cfg.replace(remat=shape.kind == "train" and cfg.remat)
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        cfg = cfg.replace(attn_variant="sliding_window")
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the step function's data arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_embed":
+            specs = {"features": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against a length-S context
+    if cfg.frontend == "audio_embed":
+        return {"token": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.float32)}
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def input_axes(cfg: ArchConfig, shape: ShapeConfig):
+    """Logical axes for input_specs (batch -> data/pod)."""
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_embed":
+            ax = {"features": "batch,seq,embed"}
+            if shape.kind == "train":
+                ax["labels"] = "batch,seq"
+            return ax
+        return {"tokens": "batch,seq"}
+    return {"token": "batch,seq,embed" if cfg.frontend == "audio_embed" else "batch,seq"}
+
+
+def synth_batch(cfg: ArchConfig, shape: ShapeConfig, key):
+    """Materialized random batch matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab_size if name in ("tokens", "token", "labels") else 2
+            out[name] = jax.random.randint(sub, s.shape, 0, max(hi, 2), s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype)
+    return out

@@ -1,0 +1,220 @@
+"""Decoder / encoder transformer stacks (dense, MoE, audio-encoder, VLM).
+
+Layers are stored *stacked* (leading ``num_layers`` dim) and executed with
+``lax.scan`` so the HLO — and hence 1-CPU dry-run compile time for the
+512-device production mesh — is O(1) in depth.  ``jax.checkpoint`` wraps the
+scanned body when ``cfg.remat`` so 4k x 256 training activations fit HBM.
+
+The hybrid (Jamba) family lives in models/hybrid.py; pure SSM reuses the
+mamba2 mixer directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.layers import constrain, dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+
+LOSS_CHUNK = 512  # sequence chunk for the CE loss (bounds logits memory)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg, key):
+    """Returns (params, axes) — axes is a matching pytree of logical-axis
+    strings for utils/sharding.py."""
+    L, d = cfg.num_layers, cfg.d_model
+    dtype = cfg.activation_dtype
+    keys = jax.random.split(key, 8)
+
+    params, axes = {}, {}
+    if cfg.frontend == "audio_embed":
+        # stub frontend: inputs arrive as (B, S, d_model) frame embeddings;
+        # a single linear adapter stands in for the conv feature projector.
+        params["embed"] = dense_init(keys[0], (d, d), dtype)
+        axes["embed"] = "embed,embed"
+    else:
+        params["embed"] = embed_init(keys[0], (cfg.vocab_size, d), dtype)
+        axes["embed"] = "vocab,embed"
+
+    layer_p, layer_a = {}, {}
+    if cfg.family == "ssm":
+        layer_p["mixer"], layer_a["mixer"] = mamba2.mamba_init(keys[1], cfg, stack=L)
+    else:
+        layer_p["attn"], layer_a["attn"] = attn.attn_init(keys[1], cfg, stack=L)
+    layer_p["ln1"] = jnp.ones((L, d), dtype)
+    layer_a["ln1"] = "layers,embed"
+    if cfg.d_ff:
+        if cfg.num_experts:
+            layer_p["ffn"], layer_a["ffn"] = moe.moe_init(keys[2], cfg, stack=L)
+        else:
+            layer_p["ffn"], layer_a["ffn"] = mlp_init(keys[2], d, cfg.d_ff, dtype, stack=L)
+        layer_p["ln2"] = jnp.ones((L, d), dtype)
+        layer_a["ln2"] = "layers,embed"
+    params["layers"], axes["layers"] = layer_p, layer_a
+
+    params["final_ln"] = jnp.ones((d,), dtype)
+    axes["final_ln"] = "embed"
+    params["head"] = dense_init(keys[3], (d, cfg.vocab_size), dtype)
+    axes["head"] = "embed,vocab"
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _layer_body(cfg, p, x, positions, causal):
+    h = x + (
+        mamba2.mamba_apply(p["mixer"], cfg, rms_norm(x, p["ln1"]))
+        if cfg.family == "ssm"
+        else attn.attn_apply(p["attn"], cfg, rms_norm(x, p["ln1"]), positions, causal)
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff:
+        z = rms_norm(h, p["ln2"])
+        if cfg.num_experts:
+            out, (aux, _drop) = moe.moe_apply(p["ffn"], cfg, z)
+        else:
+            out = mlp_apply(p["ffn"], z)
+        h = h + out
+    return h, aux
+
+
+def embed_inputs(params, cfg, inputs):
+    if cfg.frontend == "audio_embed":
+        x = jnp.einsum("bsd,de->bse", inputs.astype(cfg.activation_dtype), params["embed"])
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0)
+    return constrain(x, "batch,seq,embed")
+
+
+def forward(params, cfg, inputs, positions=None):
+    """inputs: (B,S) int tokens, or (B,S,d) embeddings for audio.
+    Returns (hidden (B,S,d), total_aux_loss)."""
+    x = embed_inputs(params, cfg, inputs)
+    causal = not cfg.is_encoder
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _layer_body(cfg, lp, h, positions, causal)
+        h = constrain(h, "batch,seq,embed")
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(x, params["final_ln"])
+    return x, aux
+
+
+def logits_fn(params, cfg, hidden):
+    out = jnp.einsum("bsd,dv->bsv", hidden, params["head"]).astype(jnp.float32)
+    return constrain(out, "batch,seq,vocab")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def _chunked_ce(params, cfg, hidden, labels, mask):
+    """Cross-entropy evaluated in sequence chunks to bound logits memory."""
+    B, S, d = hidden.shape
+    chunk = min(LOSS_CHUNK, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    h = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    y = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    m = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def step(acc, inp):
+        hc, yc, mc = inp
+        lg = logits_fn(params, cfg, hc)                     # (B,chunk,V) f32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg, batch):
+    """Next-token LM loss.  batch: {"tokens": (B,S)} (+optional mask)."""
+    tokens = batch["tokens"]
+    hidden, aux = forward(params, cfg, tokens)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])], axis=1
+    ).astype(jnp.float32)
+    ce = _chunked_ce(params, cfg, hidden, labels, mask)
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def encoder_loss(params, cfg, batch):
+    """Masked-unit prediction (hubert-style): per-frame classification."""
+    feats, labels = batch["features"], batch["labels"]
+    hidden, aux = forward(params, cfg, feats)
+    mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+    ce = _chunked_ce(params, cfg, hidden, labels, mask)
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def loss_fn(params, cfg, batch):
+    return encoder_loss(params, cfg, batch) if cfg.is_encoder else lm_loss(params, cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+class DecodeCache(NamedTuple):
+    layer_cache: object  # stacked (L, ...) KVCache or MambaState
+    pos: jax.Array
+
+
+def init_cache(cfg, batch: int, context: int):
+    window = min(cfg.window, context) if cfg.attn_variant == "sliding_window" else context
+    L = cfg.num_layers
+    prefix = lambda a: ("layers," + a) if a else "layers"
+    if cfg.family == "ssm":
+        st = mamba2.state_init(cfg, batch)
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), st)
+        ax = jax.tree.map(prefix, mamba2.state_axes())
+    else:
+        kc = attn.cache_init(cfg, batch, window, cfg.activation_dtype)
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), kc)
+        ax = jax.tree.map(prefix, attn.cache_axes())
+    return DecodeCache(stacked, jnp.zeros((), jnp.int32)), DecodeCache(ax, "")
+
+
+def decode_step(params, cfg, cache: DecodeCache, token):
+    """token: (B,1) int32 (or (B,1,d) audio embeds) -> (logits (B,1,V), cache)."""
+    x = embed_inputs(params, cfg, token)
+
+    def body(h, scanned):
+        lp, lc = scanned
+        if cfg.family == "ssm":
+            out, lc2 = mamba2.mamba_decode(lp["mixer"], cfg, rms_norm(h, lp["ln1"]), lc)
+        else:
+            lc = lc._replace(pos=cache.pos)
+            out, lc2 = attn.attn_decode(lp["attn"], cfg, rms_norm(h, lp["ln1"]), lc)
+            lc2 = lc2._replace(pos=lc2.pos * 0)  # pos tracked once, at top level
+        h = h + out
+        if cfg.d_ff:
+            z = rms_norm(h, lp["ln2"])
+            if cfg.num_experts:
+                out2, _ = moe.moe_apply(lp["ffn"], cfg, z)
+            else:
+                out2 = mlp_apply(lp["ffn"], z)
+            h = h + out2
+        return h, lc2
+
+    h, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache.layer_cache))
+    h = rms_norm(h, params["final_ln"])
+    logits = logits_fn(params, cfg, h)
+    return logits, DecodeCache(new_layer_cache, cache.pos + 1)

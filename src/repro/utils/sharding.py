@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (t5x style).
+
+Every parameter / optimizer-state leaf is annotated with a logical-axis
+string like ``"layers,heads,embed"`` (strings are pytree *leaves*, so the
+annotation tree mirrors the parameter tree).  A rule table maps logical axis
+names to mesh axis names; ``spec_for`` additionally enforces divisibility —
+if a dimension does not divide by the mesh axis size we fall back to
+replication for that dimension (e.g. phi4-mini's 24 query heads on a
+16-way model axis).  This keeps every assigned architecture lowerable on the
+production mesh without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple]
+
+# Default logical -> mesh axis rules for the production meshes.
+#   "data" axes carry the federated client cohorts (and the global batch);
+#   "model" carries megatron/expert sharding.  The "pod" axis (multi-pod
+#   mesh) extends the data axis — cohorts span pods.
+DEFAULT_RULES: dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "clients": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": "model",
+    "experts": "model",
+    "router_experts": None,   # router weights replicated (see models/moe.py)
+    "expert_mlp": None,
+    "expert_group": ("pod", "data"),
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,
+    "seq": None,
+    "window": None,
+    "cap": None,
+    "conv": None,
+    "history": None,  # L-BFGS (s, y) memory dimension
+}
+
+
+# ZeRO-1 rules for *optimizer state* (L-BFGS history, Fisher diag, moments):
+# additionally shard the embed dim over the data/pod axes.  Parameters stay
+# replicated across data (classic TP-within-pod + DP), but the m-deep
+# history at 132B params cannot (20 x 2 x params bf16), so optimizer state
+# is fully sharded; the round update all-gathers the step — standard ZeRO-1
+# semantics, and the collective cost shows up honestly in the roofline.
+OPT_RULES: dict[str, MeshAxes] = dict(DEFAULT_RULES, embed=("pod", "data"))
+
+# Full FSDP rules for *parameters* of the >=100B architectures (dbrx-132b,
+# qwen3-moe-235b): TP=16 alone leaves >16GB of weights per chip, so the
+# embed dim of every weight additionally shards over data/pod.  XLA inserts
+# the per-layer all-gather inside the scan (classic FSDP re-gather), which
+# the roofline then attributes to the collective term.
+PARAM_RULES_FSDP: dict[str, MeshAxes] = dict(DEFAULT_RULES, embed=("pod", "data"))
+
+
+def parse_axes(axes: Optional[str]) -> tuple:
+    if axes is None or axes == "":
+        return ()
+    return tuple(a.strip() for a in axes.split(","))
+
+
+def _mesh_size(mesh: Mesh, mesh_axes: MeshAxes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Optional[str],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, MeshAxes]] = None,
+) -> P:
+    """PartitionSpec for ``shape`` annotated with logical ``axes``.
+
+    Falls back to replication per-dimension when the dim size does not divide
+    the mesh axis size, or when the mesh lacks the mapped axis (single-pod
+    mesh has no "pod" axis).
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    names = parse_axes(axes)
+    if len(names) != len(shape):
+        raise ValueError(f"axes {names} do not match shape {shape}")
+    spec, used = [], set()
+    for dim, name in zip(shape, names):
+        mesh_axes = rules.get(name)
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        if mesh_axes is not None:
+            mesh_axes = tuple(a for a in mesh_axes if a in mesh.shape and a not in used)
+            if not mesh_axes:
+                mesh_axes = None
+        if mesh_axes is not None:
+            size = 1
+            for a in mesh_axes:
+                size *= mesh.shape[a]
+            if size == 0 or dim % size != 0:
+                mesh_axes = None
+        if mesh_axes is None:
+            spec.append(None)
+        else:
+            used.update(mesh_axes)
+            spec.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*spec)
+
+
+def shardings_for_tree(tree_shapes, axes_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree for a pytree of ShapeDtypeStruct/arrays + axis strings."""
+    return jax.tree.map(
+        lambda x, ax: NamedSharding(mesh, spec_for(x.shape, ax, mesh, rules)),
+        tree_shapes,
+        axes_tree,
+    )
+
+
+def specs_for_tree(tree_shapes, axes_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda x, ax: spec_for(x.shape, ax, mesh, rules), tree_shapes, axes_tree
+    )
+
+
+def data_spec(mesh: Mesh, *trailing: Optional[str]) -> P:
+    """Batch-leading PartitionSpec: batch over (pod, data), rest replicated."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None), *trailing)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE CPU device (the dry run manages its own
+# 512-device flag inside a subprocess) and deterministic platform choice.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,42 @@
+"""Aggregation rule properties (Eq. 1 / Eq. 11)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 5), st.integers(0, 10_000))
+def test_weighted_mean_is_convex_combination(k, d, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(k, d))
+    w = rng.uniform(0.1, 5.0, size=k)
+    out = np.asarray(aggregation.weighted_mean({"x": jnp.asarray(vals)},
+                                               jnp.asarray(w))["x"])
+    ref = (vals * w[:, None]).sum(0) / w.sum()
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    # convexity: within [min, max] per coordinate
+    assert (out <= vals.max(0) + 1e-6).all() and (out >= vals.min(0) - 1e-6).all()
+
+
+def test_weighted_mean_respects_nk_weighting():
+    vals = jnp.asarray([[0.0], [10.0]])
+    out = aggregation.weighted_mean({"x": vals}, jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(out["x"]), [2.5])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_grouped_mean_ignores_noncontributors(k, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(k, 3))
+    mask = (rng.uniform(size=k) > 0.5).astype(float)
+    prev = rng.normal(size=3)
+    out = np.asarray(aggregation.grouped_mean(
+        {"x": jnp.asarray(prev)}, {"x": jnp.asarray(vals)}, jnp.asarray(mask))["x"])
+    if mask.sum() == 0:
+        np.testing.assert_allclose(out, prev, rtol=1e-6)
+    else:
+        ref = (vals * mask[:, None]).sum(0) / mask.sum()
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,33 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, tree)
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    out = checkpoint.restore(path, template)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_missing_key_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, {"a": jnp.ones(3)})
+    try:
+        checkpoint.restore(path, {"a": jnp.ones(3), "b": jnp.ones(2)})
+    except KeyError:
+        return
+    raise AssertionError("expected KeyError")

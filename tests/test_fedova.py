@@ -1,0 +1,109 @@
+"""FedOVA scheme tests (paper Alg. 2 / Eqs. 4, 11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, fedova
+
+
+def test_binary_labels_and_class_mask():
+    y = jnp.asarray([0, 2, 2, 1])
+    np.testing.assert_array_equal(np.asarray(fedova.binary_labels(y, 2)), [0, 1, 1, 0])
+    mask = np.asarray(fedova.client_class_mask(y, 4))
+    np.testing.assert_array_equal(mask, [1, 1, 1, 0])
+
+
+def test_grouped_aggregate_eq11():
+    """Eq. (11): mean over contributors only; untouched groups keep server."""
+    prev = {"w": jnp.asarray([10.0, 10.0])}
+    clients = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0], [100.0, 100.0]])}
+    contributed = jnp.asarray([1.0, 1.0, 0.0])
+    out = aggregation.grouped_mean(prev, clients, contributed)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 3.0])
+    none = aggregation.grouped_mean(prev, clients, jnp.zeros(3))
+    np.testing.assert_allclose(np.asarray(none["w"]), [10.0, 10.0])
+
+
+def test_ova_predict_argmax_confidence():
+    """Eq. (4) on a hand-built linear OVA model that separates 3 classes."""
+    # component c: logit = <w_c, x>; class c points at e_c
+    W = jnp.eye(3) * 5.0
+    model = fedova.OvaModel(components={"w": W}, n_classes=3)
+
+    def apply_fn(p, x):
+        return (x @ p["w"])[:, None]
+
+    x = jnp.asarray([[1.0, 0, 0], [0, 1.0, 0.2], [0.1, 0, 1.0]])
+    pred = np.asarray(fedova.predict(apply_fn, model, x))
+    np.testing.assert_array_equal(pred, [0, 1, 2])
+    assert float(fedova.accuracy(apply_fn, model, x, jnp.asarray([0, 1, 2]))) == 1.0
+
+
+def test_aggregate_stacks_per_class():
+    n = 3
+    model = fedova.OvaModel(components={"w": jnp.zeros((n, 2))}, n_classes=n)
+    # two clients: client 0 trained classes {0,1}, client 1 trained {1}
+    clients = {"w": jnp.asarray([
+        [[1.0, 1.0], [2.0, 2.0], [9.0, 9.0]],
+        [[5.0, 5.0], [4.0, 4.0], [7.0, 7.0]],
+    ])}
+    masks = jnp.asarray([[1.0, 1.0, 0.0], [0.0, 1.0, 0.0]])
+    out = fedova.aggregate(model, clients, masks)
+    got = np.asarray(out.components["w"])
+    np.testing.assert_allclose(got[0], [1.0, 1.0])   # only client 0
+    np.testing.assert_allclose(got[1], [3.0, 3.0])   # mean of both
+    np.testing.assert_allclose(got[2], [0.0, 0.0])   # nobody -> server keeps
+
+
+def test_add_class_smooth_adaptation():
+    """Paper Sec. IV-B Remark: new classes get a fresh component; existing
+    experts (and their predictions) are untouched."""
+    import jax
+    W = jnp.eye(3) * 5.0
+    model = fedova.OvaModel(components={"w": W}, n_classes=3)
+
+    def apply_fn(p, x):
+        return (x @ p["w"][:3]) [:, None] if p["w"].shape[0] > 3 else (x @ p["w"])[:, None]
+
+    def init_fn(key):
+        return {"w": jnp.zeros(3)}
+
+    bigger = fedova.add_class(model, init_fn, jax.random.PRNGKey(0))
+    assert bigger.n_classes == 4
+    np.testing.assert_allclose(np.asarray(bigger.components["w"][:3]),
+                               np.asarray(W))
+    np.testing.assert_allclose(np.asarray(bigger.components["w"][3]),
+                               np.zeros(3))
+
+
+def test_int8_quantization_unbiased():
+    """Stochastic rounding: E[dequant(quant(x))] = x; error bounded by scale."""
+    import jax
+    from repro.fed import comm
+    x = {"w": jnp.linspace(-3.0, 3.0, 101)}
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    acc = np.zeros(101)
+    for k in keys:
+        acc += np.asarray(comm.roundtrip(x, k)["w"])
+    mean = acc / len(keys)
+    scale = 3.0 / 127
+    np.testing.assert_allclose(mean, np.asarray(x["w"]), atol=scale * 0.5)
+    one = comm.roundtrip(x, keys[0])["w"]
+    assert float(jnp.max(jnp.abs(one - x["w"]))) <= scale + 1e-6
+
+
+def test_comm_ledger_thm3_structure():
+    """Theorem 3's shape: Alg 1 tree bytes ~ 2 d log2(k) + m² scalars;
+    FedAvg star bytes ~ k d."""
+    from repro.fed import comm
+    led = comm.CommLedger()
+    d, k = 1000, 8
+    led.broadcast(d, k)
+    led.upload(d, k)          # grads
+    led.upload(d, k)          # fisher
+    led.scalars((2 * 5 + 1) ** 2)
+    led.end_round()
+    s = led.summary()
+    assert s["up_star_MB_per_round"] == 2 * d * k * 4 / 1e6
+    assert s["up_tree_MB_per_round"] == 2 * d * 3 * 4 / 1e6  # log2(8)=3
+    assert s["scalar_KB_per_round"] == (11 ** 2) * 4 / 1e3

@@ -1,0 +1,98 @@
+"""Unit tests for the vector-free L-BFGS core (paper Alg. 1 line 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lbfgs
+
+
+def _push_pairs(params, m, pairs):
+    h = lbfgs.init(params, m)
+    for s, y in pairs:
+        h = lbfgs.push(h, s, y)
+    return h
+
+
+def _flat(tree):
+    return np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(tree)])
+
+
+def _random_pd_pairs(rng, shapes, n):
+    out = []
+    for _ in range(n):
+        s = {k: jnp.asarray(rng.normal(size=shp)) for k, shp in shapes.items()}
+        y = jax.tree.map(lambda x: x * jnp.asarray(rng.uniform(0.5, 2.0, x.shape)), s)
+        out.append((s, y))
+    return out
+
+
+SHAPES = {"w": (6, 7), "b": (11,)}
+
+
+@pytest.mark.parametrize("n_pairs", [0, 1, 3, 5, 9])
+def test_matches_reference_two_loop(n_pairs):
+    rng = np.random.default_rng(n_pairs)
+    m = 5
+    params = {k: jnp.zeros(s) for k, s in SHAPES.items()}
+    pairs = _random_pd_pairs(rng, SHAPES, n_pairs)
+    h = _push_pairs(params, m, pairs)
+    g = {k: jnp.asarray(rng.normal(size=s)) for k, s in SHAPES.items()}
+    p = lbfgs.direction(h, g)
+
+    live = pairs[-m:]
+    ref = lbfgs.reference_two_loop(
+        [_flat(s) for s, _ in live], [_flat(y) for _, y in live], _flat(g))
+    np.testing.assert_allclose(_flat(p), ref, rtol=2e-5, atol=1e-6)
+
+
+def test_empty_history_is_steepest_descent():
+    params = {"w": jnp.zeros((4,))}
+    h = lbfgs.init(params, 3)
+    g = {"w": jnp.asarray([1.0, -2.0, 3.0, 0.5])}
+    p = lbfgs.direction(h, g)
+    np.testing.assert_allclose(np.asarray(p["w"]), -np.asarray(g["w"]), atol=1e-6)
+
+
+def test_circular_wrap_uses_only_last_m():
+    rng = np.random.default_rng(0)
+    m = 3
+    params = {"w": jnp.zeros((20,))}
+    pairs = _random_pd_pairs(rng, {"w": (20,)}, 8)
+    h_all = _push_pairs(params, m, pairs)
+    h_tail = _push_pairs(params, m, pairs[-m:])
+    g = {"w": jnp.asarray(rng.normal(size=20))}
+    np.testing.assert_allclose(
+        np.asarray(lbfgs.direction(h_all, g)["w"]),
+        np.asarray(lbfgs.direction(h_tail, g)["w"]), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_descent_direction_property(n_pairs, seed):
+    """With PD curvature pairs, p must be a descent direction: <p, g> < 0."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.zeros((12,))}
+    pairs = _random_pd_pairs(rng, {"w": (12,)}, n_pairs)
+    h = _push_pairs(params, 4, pairs)
+    g_np = rng.normal(size=12)
+    if np.linalg.norm(g_np) < 1e-6:
+        return
+    g = {"w": jnp.asarray(g_np)}
+    p = lbfgs.direction(h, g)
+    assert float(np.dot(_flat(p), _flat(g))) < 0.0
+
+
+def test_gram_matrix_symmetry_and_blocks():
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.zeros((9,))}
+    pairs = _random_pd_pairs(rng, {"w": (9,)}, 4)
+    h = _push_pairs(params, 4, pairs)
+    g = {"w": jnp.asarray(rng.normal(size=9))}
+    M = np.asarray(lbfgs.gram_matrix(h, g))
+    np.testing.assert_allclose(M, M.T, rtol=1e-5, atol=1e-6)
+    # diag of the s-block equals ||s_i||^2 for the slot each pair landed in
+    for slot in range(4):
+        s_i = _flat(jax.tree.map(lambda b: b[slot], h.s))
+        np.testing.assert_allclose(M[slot, slot], s_i @ s_i, rtol=1e-5)
