@@ -1,0 +1,144 @@
+"""Edge trade-off sweep: time-to-accuracy and energy-to-accuracy under a
+resource-constrained wireless uplink (repro.edge).
+
+Part A — fim_lbfgs (Algorithm 1) vs fedavg_sgd under star and tree
+topologies, sync and buffered-async aggregation, with and without int8
+upload compression.  The wall-clock column is where Theorem 3's
+communication claims become *time*: under in-network (tree) aggregation
+Algorithm 1 pays O(d log τ) per round and needs fewer rounds, while
+FedAvg's k distinct models keep the root link at O(k·d) per round.
+
+Part B — scheduling policies on a heterogeneous fleet (lognormal device
+speeds): deadline-aware straggler dropping and capacity-proportional
+selection vs the paper's uniform sampling.
+
+    PYTHONPATH=src python -m benchmarks.run --only edge
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+from repro.fed.server import FederatedRun
+
+from benchmarks.common import emit
+
+# Constrained uplink: ~100 kB/s per subchannel and a ~190 kB/s shared
+# server slice — a ~100 KB model update costs seconds and the cohort's
+# payloads queue at the base station, so communication dominates the
+# round (the FEEL regime the paper targets).
+UPLINK = dict(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+              fading="rayleigh", tx_power_w=0.5, downlink_rate_bps=20e6,
+              server_rate_bps=1.5e6)
+HETERO_FLEET = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+
+
+def _data(mcfg, quick):
+    return make_classification(mcfg, n_train=1500, n_test=400, seed=0,
+                               noise=1.2)
+
+
+def _fcfg(rounds, compress="none", edge=None):
+    return FedConfig(num_clients=20, participation=1.0, local_epochs=1,
+                     batch_size=10_000, rounds=rounds, noniid_l=3,
+                     learning_rate=0.05, compress=compress, seed=0, edge=edge)
+
+
+def _to_target(run, rounds_cap, target):
+    hist = run.run(rounds=rounds_cap, eval_every=1, target_accuracy=target)
+    hits = [h for h in hist if h.get("accuracy", 0) >= target]
+    last = hits[0] if hits else hist[-1]
+    s = run.edge.summary()
+    led = run.ledger.summary()
+    t = last.get("sim_time_s", s["wall_clock_s"])
+    e = last.get("energy_j", s["energy_j"])
+    return {
+        "rounds": last["round"] if hits else rounds_cap,
+        "hit": bool(hits),
+        "time_s": t,
+        "energy_j": e,
+        "up_star_MB": led["up_star_MB_per_round"] * last["round"],
+        "up_tree_MB": led["up_tree_MB_per_round"] * last["round"],
+    }
+
+
+def run(quick: bool = True):
+    mcfg = reduced(FMNIST_CNN)
+    train, test = _data(mcfg, quick)
+    target = 0.55
+    rounds_cap = 16 if quick else 40
+
+    # ---- Part A: algorithm x topology x mode x compression -------------
+    rows = []
+    cases = [
+        ("fim_lbfgs", "none", "star", "sync"),
+        ("fim_lbfgs", "none", "tree", "sync"),
+        ("fim_lbfgs", "int8", "star", "sync"),
+        ("fim_lbfgs", "none", "star", "async"),
+        ("fedavg_sgd", "none", "star", "sync"),
+        ("fedavg_sgd", "none", "tree", "sync"),
+        ("fedavg_sgd", "none", "star", "async"),
+    ]
+    if not quick:
+        cases += [("fim_lbfgs", "int8", "tree", "sync"),
+                  ("fedavg_adam", "none", "star", "sync"),
+                  ("feddane", "none", "tree", "sync")]
+    results = {}
+    for alg, compress, topo, mode in cases:
+        edge = EdgeConfig(
+            channel=ChannelConfig(topology=topo, **UPLINK),
+            device=HETERO_FLEET, mode=mode,
+            # near-full buffer: cuts the straggler tail without starving
+            # the (staleness-sensitive) second-order aggregation
+            buffer_size=16 if mode == "async" else 0)
+        run_ = FederatedRun(mcfg, _fcfg(rounds_cap, compress, edge),
+                            train, test, alg)
+        r = _to_target(run_, rounds_cap, target)
+        results[(alg, compress, topo, mode)] = r
+        rows.append([
+            f"{alg}+{compress}" if compress != "none" else alg, topo, mode,
+            r["rounds"] if r["hit"] else f">{rounds_cap}",
+            round(r["time_s"], 1), round(r["energy_j"], 1),
+            round(r["up_star_MB" if topo == "star" else "up_tree_MB"], 2),
+        ])
+    emit(rows, ["scheme", "topology", "mode", "rounds_to_acc55",
+                "sim_time_s", "energy_J", "uplink_MB"], "edge_tradeoff")
+
+    fim = results[("fim_lbfgs", "none", "tree", "sync")]
+    avg = results[("fedavg_sgd", "none", "tree", "sync")]
+    print(f"[edge] tree sync: fim_lbfgs {fim['time_s']:.1f}s "
+          f"/ {fim['energy_j']:.1f}J vs fedavg_sgd {avg['time_s']:.1f}s "
+          f"/ {avg['energy_j']:.1f}J to acc {target} -> "
+          f"{'fim_lbfgs WINS' if fim['time_s'] < avg['time_s'] else 'fedavg wins'}")
+
+    # ---- Part B: scheduler policies on a heterogeneous fleet -----------
+    sched_rows = []
+    policies = [("uniform", {}),
+                ("deadline", {"deadline_s": 8.0, "min_clients": 4}),
+                ("capacity_proportional", {})]
+    if not quick:
+        policies.append(("energy_threshold", {"battery_floor_j": 5.0}))
+    for name, kw in policies:
+        edge = EdgeConfig(
+            channel=ChannelConfig(topology="star", **UPLINK),
+            device=DeviceConfig(flops_per_s_mean=5e8, flops_per_s_sigma=1.5),
+            scheduler=name, **kw)
+        fcfg = FedConfig(num_clients=20, participation=0.5, local_epochs=1,
+                         batch_size=10_000, rounds=rounds_cap, noniid_l=3,
+                         learning_rate=0.05, seed=0, edge=edge)
+        run_ = FederatedRun(mcfg, fcfg, train, test, "fedavg_sgd")
+        r = _to_target(run_, rounds_cap, 0.5)
+        s = run_.edge.summary()
+        sched_rows.append([name, r["rounds"] if r["hit"] else f">{rounds_cap}",
+                           round(r["time_s"], 1), round(r["energy_j"], 1),
+                           s["dropped_total"]])
+    emit(sched_rows, ["scheduler", "rounds_to_acc50", "sim_time_s",
+                      "energy_J", "dropped"], "edge_schedulers")
+    return rows, sched_rows
+
+
+if __name__ == "__main__":
+    run()

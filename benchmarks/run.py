@@ -18,8 +18,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fig4_hyperparams, kernels_bench, roofline,
-                            table2_optimizers, table3_noniid,
+    from benchmarks import (edge_tradeoff, fig4_hyperparams, kernels_bench,
+                            roofline, table2_optimizers, table3_noniid,
                             table4_datasharing, table5_clients,
                             thm3_comm_cost)
 
@@ -30,6 +30,7 @@ def main() -> None:
         "table5": lambda: table5_clients.run(quick),
         "fig4": lambda: fig4_hyperparams.run(quick),
         "thm3": lambda: thm3_comm_cost.run(quick),
+        "edge": lambda: edge_tradeoff.run(quick),
         "kernels": lambda: kernels_bench.run(quick),
         "roofline": roofline.run,
     }

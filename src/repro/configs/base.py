@@ -9,9 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # annotation only — repro.edge stays an optional layer
+    from repro.edge.runtime import EdgeConfig
 
 
 @dataclass(frozen=True)
@@ -152,6 +155,10 @@ class FedConfig:
     noniid_l: int = 0            # 0 = IID, else labels per client
     compress: str = "none"       # "int8" = stochastic-rounding uploads (4x)
     seed: int = 0
+    # Optional resource-constrained edge simulation (repro.edge): wireless
+    # channels, heterogeneous devices, scheduling, async aggregation.
+    # None = the paper's cost-free instantaneous clients (default).
+    edge: Optional["EdgeConfig"] = None
 
 
 _REGISTRY: dict[str, ArchConfig] = {}

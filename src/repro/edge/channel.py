@@ -1,0 +1,126 @@
+"""Wireless channel model: Shannon-capacity links per client.
+
+Each client k gets an uplink rate drawn per round,
+
+    r_k = W · log2(1 + γ_k · h_k)
+
+with W the allotted bandwidth (OFDMA subchannel — uplinks proceed in
+parallel), γ_k the mean linear SNR of client k (lognormal shadowing across
+the fleet, fixed per client), and h_k ~ Exp(1) optional per-round Rayleigh
+fading power.  Transmission time for a payload of b bytes is 8b / r_k and
+uplink energy is P_tx · t (the transmit-power model of arXiv:2104.05509
+Sec. II; arXiv:1910.13067 uses the same capacity form for its resource
+allocation).
+
+Topologies (mirrors ``CommLedger``):
+  * star — every selected client transmits its full payload to the server
+    over its own subchannel; the round's comm phase ends when the slowest
+    finishes.
+  * tree — in-network aggregation along a binary tree of the selected
+    clients: each node forwards ONE aggregated payload per level, so a
+    round's comm time is depth × (slowest single hop), and the server link
+    carries a single payload — Theorem 3's O(d log τ) reading.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    bandwidth_hz: float = 1e6        # W — per-client uplink subchannel
+    snr_db_mean: float = 10.0        # fleet-mean uplink SNR
+    snr_db_std: float = 4.0          # lognormal shadowing across clients
+    fading: str = "rayleigh"         # "none" | "rayleigh" (per-round Exp(1))
+    tx_power_w: float = 0.5          # P_tx during uplink transmission
+    downlink_rate_bps: float = 50e6  # base-station broadcast (fast, shared)
+    server_rate_bps: float = 5e6     # base-station uplink slice: the SHARED
+                                     # capacity every payload reaching the
+                                     # server must cross (Theorem 3's O(k·d)
+                                     # server-link term lives here)
+    topology: str = "star"           # "star" | "tree"
+
+
+class Channel:
+    """Per-client link state; rates are re-drawn each round via ``sample``."""
+
+    def __init__(self, cfg: ChannelConfig, num_clients: int, seed: int = 0):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        self._rng = np.random.default_rng(seed)
+        # static per-client mean SNR (shadowing): lognormal in dB
+        snr_db = self._rng.normal(cfg.snr_db_mean, cfg.snr_db_std, num_clients)
+        self._snr_lin = 10.0 ** (snr_db / 10.0)
+        self.rates_bps = self._draw_rates()
+
+    def _draw_rates(self) -> np.ndarray:
+        snr = self._snr_lin
+        if self.cfg.fading == "rayleigh":
+            snr = snr * self._rng.exponential(1.0, self.num_clients)
+        return self.cfg.bandwidth_hz * np.log2(1.0 + snr)
+
+    def sample(self) -> np.ndarray:
+        """Re-draw fading for a new round; returns uplink rates (bit/s)."""
+        self.rates_bps = self._draw_rates()
+        return self.rates_bps
+
+    # ------------------------------------------------------------------
+    def uplink_time_s(self, n_bytes: float, clients) -> np.ndarray:
+        """Per-client transmission time for an ``n_bytes`` payload."""
+        r = self.rates_bps[np.asarray(clients, dtype=int)]
+        return 8.0 * float(n_bytes) / np.maximum(r, 1e-6)
+
+    def uplink_energy_j(self, n_bytes: float, clients) -> np.ndarray:
+        return self.cfg.tx_power_w * self.uplink_time_s(n_bytes, clients)
+
+    def downlink_time_s(self, n_bytes: float) -> float:
+        """Broadcast time (one multicast payload on the shared downlink)."""
+        return 8.0 * float(n_bytes) / max(self.cfg.downlink_rate_bps, 1e-6)
+
+    # ------------------------------------------------------------------
+    def comm_round_time_s(self, n_bytes: float, clients,
+                          aggregatable: bool = True) -> float:
+        """Wall time of the upload phase for the selected cohort.
+
+        star: parallel subchannels -> max over clients.
+        tree, aggregatable payloads (gradients/FIM — anything summed in-
+        network): ceil(log2 k) levels, each bounded by the slowest hop; an
+        aggregated payload is the same size as a client payload — the
+        O(d log τ) reading of Theorem 3.
+        tree, non-aggregatable payloads (FedAvg's k distinct local models):
+        no in-network gain — the root link must carry every payload, so
+        the bottleneck serializes k transfers on the best link (Theorem
+        3's O(k·d) term survives the topology change)."""
+        n_bytes = float(n_bytes)
+        if aggregatable:
+            return self.comm_round_time_split(n_bytes, 0.0, clients)
+        return self.comm_round_time_split(0.0, n_bytes, clients)
+
+    def comm_round_time_split(self, agg_bytes: float, nonagg_bytes: float,
+                              clients) -> float:
+        """Upload-phase wall time for a payload that is part aggregatable
+        (summed in-network: gradients/FIM) and part not (distinct local
+        models the server must see individually) — e.g. FedDANE's
+        gradient + model phases."""
+        clients = np.asarray(clients, dtype=int)
+        k = clients.size
+        total = float(agg_bytes) + float(nonagg_bytes)
+        if k == 0 or total <= 0:
+            return 0.0
+        per = self.uplink_time_s(total, clients)
+        srv = max(self.cfg.server_rate_bps, 1e-6)
+        if self.cfg.topology == "tree":
+            # aggregation parents are chosen among well-connected neighbours,
+            # so a level costs a *representative* (median) hop, not the
+            # fleet-worst deep fade.  Aggregatable bytes cross the server
+            # link ONCE (O(d log τ)); non-aggregatable bytes cross it k
+            # times (Theorem 3's O(k·d) survives the topology change).
+            depth = max(1, math.ceil(math.log2(max(k, 2))))
+            hops = depth * float(np.median(per))
+            return hops + 8.0 * (agg_bytes + k * nonagg_bytes) / srv
+        # star: subchannel air times in parallel, then every payload (both
+        # classes) must cross the shared server slice
+        return max(float(per.max()), 8.0 * k * total / srv)

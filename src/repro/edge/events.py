@@ -1,0 +1,82 @@
+"""Event-driven simulation clock for the edge runtime.
+
+A minimal discrete-event core: the runtime pushes client-completion (or
+arbitrary) events tagged with absolute times and pops them in time order.
+Synchronous rounds reduce to ``advance(max_k t_k)``; the buffered
+asynchronous aggregator pops completions one by one and lets the round
+boundary fall wherever its buffer fills.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int = field(compare=True)          # tie-break: FIFO among equal times
+    kind: str = field(compare=False, default="")
+    client: int = field(compare=False, default=-1)
+    payload: Any = field(compare=False, default=None)
+
+
+class EventClock:
+    """Monotone simulation clock + pending-event heap (seconds)."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, kind: str = "", client: int = -1,
+             payload: Any = None) -> Event:
+        if time < self._now:
+            raise ValueError(f"event at t={time} is before now={self._now}")
+        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+                   client=client, payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def push_after(self, delay: float, kind: str = "", client: int = -1,
+                   payload: Any = None) -> Event:
+        return self.push(self._now + max(0.0, float(delay)), kind, client, payload)
+
+    def pop(self) -> Optional[Event]:
+        """Pop the earliest pending event and advance the clock to it."""
+        if not self._heap:
+            return None
+        ev = heapq.heappop(self._heap)
+        self._now = max(self._now, ev.time)
+        return ev
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def advance(self, delta: float) -> float:
+        """Advance the clock by ``delta`` seconds (synchronous round time)."""
+        if delta < 0:
+            raise ValueError(f"cannot advance by negative delta {delta}")
+        self._now += float(delta)
+        return self._now
+
+    def round_time(self, client_times, quantile: float = 1.0) -> float:
+        """Synchronous-round wall time: the ``quantile`` of per-client
+        completion times (1.0 = wait for the slowest; <1 models deadline
+        truncation where stragglers are dropped at the quantile)."""
+        import numpy as np
+
+        ts = np.asarray(list(client_times), dtype=np.float64)
+        if ts.size == 0:
+            return 0.0
+        q = min(max(quantile, 0.0), 1.0)
+        return float(np.quantile(ts, q))

@@ -1,0 +1,193 @@
+"""EdgeConfig + EdgeRuntime: the glue under ``FederatedRun``.
+
+``EdgeConfig`` is an optional field on ``FedConfig``; when present, the
+federated loop routes client selection through a scheduling policy and
+converts every round's (already ledger-counted) bytes plus the client
+compute work into simulated wall-clock time and energy:
+
+  sync round   wall = t_downlink + max_k t_comp,k + t_agg(topology)
+  async round  wall = until the aggregation buffer fills (stragglers
+                      land in later buffers, staleness-discounted)
+
+The runtime never changes WHAT is transmitted — `CommLedger` byte counts
+are scheduler-independent — only WHO transmits and WHEN it lands.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.edge.async_agg import AsyncAggregator
+from repro.edge.channel import Channel, ChannelConfig
+from repro.edge.device import DeviceConfig, DeviceFleet
+from repro.edge.events import EventClock
+from repro.edge.scheduler import ClientEstimate, make_scheduler
+
+
+@dataclass(frozen=True)
+class EdgeConfig:
+    """Knobs for the simulated wireless edge (all times seconds, energies
+    joules).  ``scheduler`` ∈ {uniform, deadline, energy_threshold,
+    capacity_proportional}; ``mode`` ∈ {sync, async}."""
+    channel: ChannelConfig = field(default_factory=ChannelConfig)
+    device: DeviceConfig = field(default_factory=DeviceConfig)
+    scheduler: str = "uniform"
+    deadline_s: float = 1.0              # deadline policy
+    min_clients: int = 1
+    battery_floor_j: float = 0.0         # energy_threshold policy
+    round_budget_j: float = float("inf")
+    mode: str = "sync"
+    buffer_size: int = 0                 # async: 0 -> ceil(cohort/2)
+    staleness_alpha: float = 0.5         # async: (1+τ)^-alpha discount
+    seed: int = 0
+
+
+class EdgeRuntime:
+    """Mutable per-run edge state: channel fading, fleet batteries, the
+    simulation clock, and (in async mode) the in-flight buffer."""
+
+    def __init__(self, cfg: EdgeConfig, num_clients: int, seed: int = 0):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        s = seed + cfg.seed
+        self.channel = Channel(cfg.channel, num_clients, seed=s + 1)
+        self.fleet = DeviceFleet(cfg.device, num_clients, seed=s + 2)
+        self.rng = np.random.default_rng(s + 3)
+        self.clock = EventClock()
+        self.scheduler = make_scheduler(
+            cfg.scheduler, deadline_s=cfg.deadline_s,
+            min_clients=cfg.min_clients, battery_floor_j=cfg.battery_floor_j,
+            round_budget_j=cfg.round_budget_j)
+        self.async_agg: Optional[AsyncAggregator] = None
+        if cfg.mode == "async":
+            # buffer_size 0 = auto: half the dispatched cohort, resolved at
+            # the first dispatch (see dispatch_async)
+            self.async_agg = AsyncAggregator(
+                self.clock, buffer_size=max(cfg.buffer_size, 1),
+                alpha=cfg.staleness_alpha)
+        self.busy: set[int] = set()      # async: clients with work in flight
+        self._buffer_resolved = False    # async auto-buffer picked yet?
+        self.energy_j = 0.0
+        self.dropped_total = 0
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def estimate(self, clients, up_bytes: float, flops) -> ClientEstimate:
+        """Predicted per-client round cost.  ``flops`` is scalar or (n,)
+        aligned with ``clients`` (local work scales with |D_k|)."""
+        c = np.asarray(clients, dtype=int)
+        fl = np.broadcast_to(np.asarray(flops, dtype=float), c.shape)
+        t_comp = fl / np.maximum(self.fleet.flops_per_s[c], 1.0)
+        t_up = self.channel.uplink_time_s(up_bytes, c)
+        e_comp = fl * self.fleet.cfg.joules_per_flop
+        e_tx = self.channel.uplink_energy_j(up_bytes, c)
+        return ClientEstimate(clients=c, time_s=t_comp + t_up,
+                              energy_j=e_comp + e_tx,
+                              battery_j=self.fleet.battery_j[c].copy())
+
+    def select(self, k: int, eligible, up_bytes: float, flops
+               ) -> tuple[list[int], ClientEstimate]:
+        """Start a round: re-draw fading, filter dead clients, run the
+        scheduling policy.  Returns (cohort, estimates for the cohort)."""
+        self.channel.sample()
+        alive = self.fleet.alive(np.asarray(eligible, dtype=int))
+        if alive.size == 0:
+            return [], ClientEstimate(np.zeros(0, int), np.zeros(0),
+                                      np.zeros(0), np.zeros(0))
+        fl = np.broadcast_to(np.asarray(flops, dtype=float),
+                             np.asarray(eligible).shape)
+        keep = np.isin(np.asarray(eligible, dtype=int), alive)
+        est = self.estimate(np.asarray(eligible, dtype=int)[keep],
+                            up_bytes, fl[keep])
+        selected, dropped = self.scheduler.select(k, est, self.rng)
+        self.dropped_total += len(dropped)
+        return selected, est.for_ids(selected)
+
+    # ------------------------------------------------------------------
+    def finish_round_sync(self, est_sel: ClientEstimate, up_bytes: float,
+                          down_bytes: float, aggregatable: bool = True,
+                          nonagg_bytes: Optional[float] = None) -> dict:
+        """Advance the clock over a synchronous round and drain batteries.
+
+        star: barrier at the slowest client's compute+uplink finish.
+        tree: compute barrier, then the aggregation phase (log2(τ) hops
+        for summable payloads, serialized root link otherwise).
+
+        ``nonagg_bytes`` carves that many of ``up_bytes`` out as
+        non-aggregatable (mixed payloads, e.g. FedDANE's gradient + model
+        phases); when given it overrides ``aggregatable``."""
+        t_down = self.channel.downlink_time_s(down_bytes)
+        c = est_sel.clients
+        if nonagg_bytes is None:
+            agg, nonagg = ((up_bytes, 0.0) if aggregatable
+                           else (0.0, up_bytes))
+        else:
+            nonagg = min(float(nonagg_bytes), float(up_bytes))
+            agg = float(up_bytes) - nonagg
+        if c.size == 0:
+            self.clock.advance(t_down)
+            return self._record(0.0 + t_down, 0.0, c)
+        if self.channel.cfg.topology == "tree":
+            fl_t = est_sel.time_s - self.channel.uplink_time_s(up_bytes, c)
+            t_round = float(np.max(fl_t)) + self.channel.comm_round_time_split(
+                agg, nonagg, c)
+        else:
+            # per-client completions in parallel subchannels, then the
+            # shared server slice drains the cohort's payloads
+            t_round = max(self.clock.round_time(est_sel.time_s),
+                          self.channel.comm_round_time_split(agg, nonagg, c))
+        self.clock.advance(t_down + t_round)
+        e = float(est_sel.energy_j.sum())
+        self.fleet.spend(c, est_sel.energy_j)
+        return self._record(t_down + t_round, e, c)
+
+    def dispatch_async(self, est_sel: ClientEstimate, n_samples, payloads,
+                       down_bytes: float) -> None:
+        """Submit the cohort's results into the in-flight buffer (energy is
+        spent at dispatch — the client does the work regardless of when
+        its update lands)."""
+        assert self.async_agg is not None, "EdgeConfig.mode != 'async'"
+        if (self.cfg.buffer_size == 0 and est_sel.clients.size
+                and not self._buffer_resolved):
+            self.async_agg.buffer_size = max(1, (est_sel.clients.size + 1) // 2)
+            self._buffer_resolved = True
+        self.clock.advance(self.channel.downlink_time_s(down_bytes))
+        self.fleet.spend(est_sel.clients, est_sel.energy_j)
+        self.energy_j += float(est_sel.energy_j.sum())
+        for i, cl in enumerate(est_sel.clients):
+            self.busy.add(int(cl))
+            self.async_agg.submit(int(cl), float(est_sel.time_s[i]),
+                                  float(np.asarray(n_samples)[i]), payloads[i])
+
+    def pop_async_buffer(self):
+        """Drain the next buffer; advances the clock to its last arrival.
+        Returns (entries, staleness weights summing to 1)."""
+        assert self.async_agg is not None
+        t0 = self.clock.now
+        entries, w = self.async_agg.pop_buffer()
+        for e in entries:
+            self.busy.discard(e.client)
+        self._record(self.clock.now - t0, 0.0,
+                     np.asarray([e.client for e in entries], int))
+        return entries, w
+
+    # ------------------------------------------------------------------
+    def _record(self, wall_s: float, energy_j: float, clients) -> dict:
+        self.energy_j += energy_j
+        rec = {"wall_s": float(wall_s), "clock_s": self.clock.now,
+               "energy_j": self.energy_j, "cohort": len(clients)}
+        self.history.append(rec)
+        return rec
+
+    def summary(self) -> dict:
+        return {
+            "wall_clock_s": self.clock.now,
+            "energy_j": self.energy_j,
+            "rounds": len(self.history),
+            "dropped_total": self.dropped_total,
+            "depleted_clients": int((self.fleet.battery_j <= 0).sum()),
+            "in_flight": 0 if self.async_agg is None else self.async_agg.in_flight,
+        }

@@ -46,14 +46,22 @@ class CommLedger:
         # one multicast payload counted once per client link
         self.down_bytes += n_floats * BYTES_F32 * n_clients
 
-    def upload(self, n_floats: int, n_clients: int,
-               bytes_per_el: int = BYTES_F32) -> None:
-        """An aggregatable upload (gradient/FIM/params) from each client."""
+    def upload(self, n_floats: float, n_clients: int,
+               bytes_per_el: int = BYTES_F32, aggregatable: bool = True) -> None:
+        """A per-client upload of ``n_floats`` elements.
+
+        aggregatable=True (gradients/FIM/summable params): in-network tree
+        aggregation applies — each level halves the number of payloads, so
+        any single node forwards at most ceil(log2 k) payloads of size d.
+        aggregatable=False (FedAvg-style distinct local models the server
+        must see individually): the tree carries every payload to the root,
+        no gain over star."""
         self.up_star_bytes += n_floats * bytes_per_el * n_clients
-        # tree aggregation: each level halves the number of payloads; any
-        # single node forwards at most ceil(log2 k)+1 payloads of size d.
-        depth = max(1, math.ceil(math.log2(max(n_clients, 2))))
-        self.up_tree_bytes += n_floats * bytes_per_el * depth
+        if aggregatable:
+            depth = max(1, math.ceil(math.log2(max(n_clients, 2))))
+            self.up_tree_bytes += n_floats * bytes_per_el * depth
+        else:
+            self.up_tree_bytes += n_floats * bytes_per_el * n_clients
 
     def scalars(self, n: int) -> None:
         self.scalar_bytes += n * BYTES_F32

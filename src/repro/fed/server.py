@@ -26,6 +26,8 @@ import numpy as np
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import CNNConfig
 from repro.core import aggregation, baselines, fedova, fim_lbfgs
+from repro.edge import device as edge_device
+from repro.edge.runtime import EdgeRuntime
 from repro.fed import comm
 from repro.data.partition import noniid_partition
 from repro.data.synthetic import Dataset
@@ -85,14 +87,110 @@ class FederatedRun:
                 "fim_lbfgs" if algorithm == "fim_lbfgs" else "fedavg_sgd",
                 self.params, fed_cfg)
         self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, model_cfg, x, y))
+        # ---- optional resource-constrained edge simulation (repro.edge)
+        edge_cfg = getattr(fed_cfg, "edge", None)
+        self.edge: Optional[EdgeRuntime] = None
+        if edge_cfg is not None:
+            if edge_cfg.mode == "async" and (
+                    self.is_ova or algorithm == "feddane"):
+                raise ValueError(
+                    "async edge mode needs summable client payloads; "
+                    f"{algorithm!r} supports sync edge simulation only")
+            self.edge = EdgeRuntime(edge_cfg, fed_cfg.num_clients,
+                                    fed_cfg.seed)
+        self._edge_est = None
+        self._n_params_cache: Optional[int] = None
+        self._flops_cache: dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    # edge planning: payload bytes + client FLOPs per round, per algorithm
+    # (parameter counts and partition sizes are run-constant -> cached)
+    def _n_params(self) -> int:
+        if self._n_params_cache is None:
+            if self.is_ova:
+                one = jax.tree.map(lambda l: l[0], self.model.components)
+                self._n_params_cache = comm.tree_n_floats(one)
+            else:
+                self._n_params_cache = comm.tree_n_floats(self.params)
+        return self._n_params_cache
+
+    def _ova_classes_per_client(self) -> int:
+        n_cls = self.train.n_classes
+        return min(self.fcfg.noniid_l or n_cls, n_cls)
+
+    def _plan_upload_bytes(self) -> float:
+        """Predicted per-client upload bytes per round (matches the ledger)."""
+        d = self._n_params()
+        per_el = comm.BYTES_INT8 if self.compress == "int8" else comm.BYTES_F32
+        if self.algorithm == "fim_lbfgs":
+            return 2.0 * d * per_el                 # ∇F_k and Γ_k
+        if self.algorithm == "feddane":
+            return 2.0 * d * comm.BYTES_F32         # gradient + model phases
+        if self.is_ova:
+            return float(d * self._ova_classes_per_client() * comm.BYTES_F32)
+        return float(d * comm.BYTES_F32)            # local model
+
+    def _plan_downlink_bytes(self) -> float:
+        d = self._n_params()
+        if self.is_ova:
+            return float(d * self.train.n_classes * comm.BYTES_F32)
+        if self.algorithm == "feddane":
+            return 2.0 * d * comm.BYTES_F32         # ω_t then global gradient
+        return float(d * comm.BYTES_F32)
+
+    def _plan_flops(self, k: int) -> float:
+        if k in self._flops_cache:
+            return self._flops_cache[k]
+        self._flops_cache[k] = self._plan_flops_uncached(k)
+        return self._flops_cache[k]
+
+    def _plan_flops_uncached(self, k: int) -> float:
+        n = len(self.partition[k])
+        p = self._n_params()
+        e = self.fcfg.local_epochs
+        if self.algorithm == "fim_lbfgs":
+            return edge_device.flops_grad_fim(p, n)
+        if self.algorithm == "feddane":
+            return (edge_device.flops_grad_fim(p, n)
+                    + edge_device.flops_local_sgd(p, n, e))
+        if self.is_ova:
+            return (edge_device.flops_local_sgd(p, n, e)
+                    * self._ova_classes_per_client())
+        return edge_device.flops_local_sgd(p, n, e)
 
     # ------------------------------------------------------------------
     def sample_clients(self) -> list[int]:
         k = max(1, int(self.fcfg.participation * self.fcfg.num_clients))
         eligible = [i for i in range(self.fcfg.num_clients)
                     if len(self.partition[i]) > 0]
-        return list(self.rng.choice(eligible, size=min(k, len(eligible)),
-                                    replace=False))
+        if self.edge is None:
+            return list(self.rng.choice(eligible, size=min(k, len(eligible)),
+                                        replace=False))
+        if self.edge.async_agg is not None:  # don't re-pick in-flight clients
+            eligible = [i for i in eligible if i not in self.edge.busy]
+        flops = np.asarray([self._plan_flops(i) for i in eligible])
+        selected, est = self.edge.select(
+            k, eligible, self._plan_upload_bytes(), flops)
+        self._edge_est = est
+        return selected
+
+    def _edge_sync_finish(self, info: dict) -> dict:
+        if self.edge is not None and self.edge.async_agg is None:
+            # gradient/FIM (and per-class OVA component) uploads sum in the
+            # network; FedAvg local-model uploads do not; FedDANE is half
+            # and half (phase-1 gradients sum, phase-2 models do not —
+            # matching the ledger's aggregatable flags above)
+            aggregatable = self.algorithm == "fim_lbfgs" or self.is_ova
+            nonagg = None
+            if self.algorithm == "feddane":
+                nonagg = self._n_params() * comm.BYTES_F32  # the model phase
+            rec = self.edge.finish_round_sync(
+                self._edge_est, self._plan_upload_bytes(),
+                self._plan_downlink_bytes(), aggregatable=aggregatable,
+                nonagg_bytes=nonagg)
+            info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
+                        energy_j=rec["energy_j"])
+        return info
 
     def _client_data(self, k: int):
         idx = self.partition[k]
@@ -132,12 +230,37 @@ class FederatedRun:
         m = self.fcfg.lbfgs_m
         self.ledger.scalars((2 * m + 1) ** 2)            # Gram exchange (m²)
         self.ledger.end_round()
-        w = jnp.asarray(weights, jnp.float32)
-        grad = aggregation.weighted_mean(jax.tree.map(lambda *t: jnp.stack(t), *grads), w)
-        fimd = aggregation.weighted_mean(jax.tree.map(lambda *t: jnp.stack(t), *fims), w)
-        self.params, self.opt_state, stats = self._opt_update(
-            self.opt_state, self.params, grad, fimd)
-        return {"loss": float(np.mean(losses))}
+        info = {"loss": float(np.mean(losses)) if losses else float("nan")}
+        if self.edge is not None and self.edge.async_agg is not None:
+            # buffered async: dispatch this cohort, aggregate whatever
+            # buffer of (possibly stale) results arrives first
+            self.edge.dispatch_async(self._edge_est, weights,
+                                     list(zip(grads, fims)),
+                                     self._plan_downlink_bytes())
+            entries, w_st = self.edge.pop_async_buffer()
+            if entries:
+                wj = jnp.asarray(w_st, jnp.float32)
+                grad = aggregation.weighted_mean(
+                    jax.tree.map(lambda *t: jnp.stack(t),
+                                 *[e.payload[0] for e in entries]), wj)
+                fimd = aggregation.weighted_mean(
+                    jax.tree.map(lambda *t: jnp.stack(t),
+                                 *[e.payload[1] for e in entries]), wj)
+                self.params, self.opt_state, _ = self._opt_update(
+                    self.opt_state, self.params, grad, fimd)
+            rec = self.edge.history[-1]
+            info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
+                        energy_j=rec["energy_j"], aggregated=len(entries))
+            return info
+        if grads:
+            w = jnp.asarray(weights, jnp.float32)
+            grad = aggregation.weighted_mean(
+                jax.tree.map(lambda *t: jnp.stack(t), *grads), w)
+            fimd = aggregation.weighted_mean(
+                jax.tree.map(lambda *t: jnp.stack(t), *fims), w)
+            self.params, self.opt_state, stats = self._opt_update(
+                self.opt_state, self.params, grad, fimd)
+        return self._edge_sync_finish(info)
 
     def _round_fedavg(self, selected) -> dict:
         results, weights, losses = [], [], []
@@ -146,8 +269,7 @@ class FederatedRun:
         # FedAvg-type uploads are NOT tree-aggregatable with weights alone
         # in the paper's accounting (server receives k local models): the
         # O(kd) of Theorem 3's comparison.
-        self.ledger.upload(d, len(selected))
-        self.ledger.up_tree_bytes = self.ledger.up_star_bytes  # no tree gain
+        self.ledger.upload(d, len(selected), aggregatable=False)
         self.ledger.end_round()
         for k in selected:
             xs, ys = self._client_data(k)
@@ -162,23 +284,54 @@ class FederatedRun:
                 p, l = self._local_sgd(self.params, batches,
                                        lr=float(self.fcfg.learning_rate))
             results.append(p); weights.append(len(xs)); losses.append(float(l))
-        w = jnp.asarray(weights, jnp.float32)
-        stacked = jax.tree.map(lambda *t: jnp.stack(t), *results)
-        self.params = aggregation.weighted_mean(stacked, w)
-        return {"loss": float(np.mean(losses))}
+        info = {"loss": float(np.mean(losses)) if losses else float("nan")}
+        if self.edge is not None and self.edge.async_agg is not None:
+            # async FedAvg aggregates model *deltas* so a stale update is a
+            # (discounted) correction to the current params, not a pull
+            # back toward the stale starting point
+            deltas = [jax.tree.map(lambda a, b: a - b, p, self.params)
+                      for p in results]
+            self.edge.dispatch_async(self._edge_est, weights, deltas,
+                                     self._plan_downlink_bytes())
+            entries, w_st = self.edge.pop_async_buffer()
+            if entries:
+                wj = jnp.asarray(w_st, jnp.float32)
+                delta = aggregation.weighted_mean(
+                    jax.tree.map(lambda *t: jnp.stack(t),
+                                 *[e.payload for e in entries]), wj)
+                self.params = jax.tree.map(lambda p, dl: p + dl,
+                                           self.params, delta)
+            rec = self.edge.history[-1]
+            info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
+                        energy_j=rec["energy_j"], aggregated=len(entries))
+            return info
+        if results:
+            w = jnp.asarray(weights, jnp.float32)
+            stacked = jax.tree.map(lambda *t: jnp.stack(t), *results)
+            self.params = aggregation.weighted_mean(stacked, w)
+        return self._edge_sync_finish(info)
 
     def _round_feddane(self, selected) -> dict:
-        # phase 1: gradients at w_t
+        if not selected:
+            self.ledger.end_round()  # empty rounds still count, as in
+            return self._edge_sync_finish({"loss": float("nan")})  # fedavg
+        d = comm.tree_n_floats(self.params)
+        # phase 1: broadcast w_t, clients upload gradients (aggregatable)
+        self.ledger.broadcast(d, len(selected))
         grads, weights = [], []
         for k in selected:
             xs, ys = self._client_data(k)
             batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
             g, _, _ = self._grad_fim(self.params, batch)
             grads.append(g); weights.append(len(xs))
+        self.ledger.upload(d, len(selected))
         w = jnp.asarray(weights, jnp.float32)
         stacked_g = jax.tree.map(lambda *t: jnp.stack(t), *grads)
         global_grad = aggregation.weighted_mean(stacked_g, w)
-        # phase 2: corrected inner solves
+        # phase 2: broadcast the global gradient, clients run corrected
+        # inner solves and upload their local models (NOT aggregatable:
+        # the server averages k distinct iterates — FedDANE's O(2kd))
+        self.ledger.broadcast(d, len(selected))
         results, losses = [], []
         for j, k in enumerate(selected):
             xs, ys = self._client_data(k)
@@ -188,12 +341,17 @@ class FederatedRun:
             p, l = self._dane(self.params, batches, global_grad, g0,
                               lr=float(self.fcfg.learning_rate), mu=0.1)
             results.append(p); losses.append(float(l))
+        self.ledger.upload(d, len(selected), aggregatable=False)
+        self.ledger.end_round()
         stacked = jax.tree.map(lambda *t: jnp.stack(t), *results)
         self.params = aggregation.weighted_mean(stacked, w)
-        return {"loss": float(np.mean(losses))}
+        return self._edge_sync_finish({"loss": float(np.mean(losses))})
 
     def _round_fedova(self, selected) -> dict:
         n = self.model.n_classes
+        d_comp = self._n_params()              # one binary component
+        # server broadcasts the full OVA component stack to each client
+        self.ledger.broadcast(d_comp * n, len(selected))
         comps, masks, losses = [], [], []
         for k in selected:
             xs, ys = self._client_data(k)
@@ -222,10 +380,19 @@ class FederatedRun:
                 losses.append(float(l))
             comps.append(client_comp)
             masks.append(mask)
-        stacked = jax.tree.map(lambda *t: jnp.stack(t), *comps)
-        self.model = fedova.aggregate(
-            self.model, stacked, jnp.asarray(np.stack(masks)))
-        return {"loss": float(np.mean(losses)) if losses else float("nan")}
+        if selected:
+            # each client uploads only the components it trained (its local
+            # label set); the grouped aggregation (Eq. 11) is a per-class
+            # weighted mean, so these uploads ARE tree-aggregatable
+            mean_floats = d_comp * float(np.stack(masks).sum(1).mean())
+            self.ledger.upload(mean_floats, len(selected))
+            self.ledger.scalars(n * len(selected))  # class-presence masks
+            stacked = jax.tree.map(lambda *t: jnp.stack(t), *comps)
+            self.model = fedova.aggregate(
+                self.model, stacked, jnp.asarray(np.stack(masks)))
+        self.ledger.end_round()
+        return self._edge_sync_finish(
+            {"loss": float(np.mean(losses)) if losses else float("nan")})
 
     # ------------------------------------------------------------------
     def evaluate(self, max_examples: int = 2000) -> float:

@@ -10,12 +10,16 @@ O(d log τ) term (see launch/train.py for the LLM-scale equivalent where
 microbatch cohorts play the client role)."""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation, fim, fim_lbfgs
+from repro.edge.device import flops_grad_fim
+from repro.edge.runtime import EdgeRuntime
+from repro.fed import comm
 
 
 def make_round_step(loss_fn: Callable, per_example_loss: Callable | None,
@@ -44,3 +48,32 @@ def make_round_step(loss_fn: Callable, per_example_loss: Callable | None,
         return new_params, new_state, stats
 
     return jax.jit(round_step)
+
+
+def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
+              compress: str = "none"):
+    """Wrap a jitted ``round_step`` with the edge cost model.
+
+    The vmapped cohort is the selected client set; after the device-side
+    step, the wrapper advances the edge clock by the synchronous-round
+    wall time (per-client grad+FIM compute plus the 2d-float uplink under
+    the configured topology) and drains batteries.  stats gains
+    ``wall_s`` / ``sim_time_s`` / ``energy_j`` host-side entries."""
+    per_el = comm.BYTES_INT8 if compress == "int8" else comm.BYTES_F32
+    up_bytes = 2.0 * n_params * per_el
+    down_bytes = float(n_params * comm.BYTES_F32)
+
+    def edge_round_step(params, opt_state, cohort_batch, weights):
+        new_params, new_state, stats = round_step(
+            params, opt_state, cohort_batch, weights)
+        k, b = cohort_batch["y"].shape[:2]
+        cohort = np.arange(k) % edge.num_clients
+        edge.channel.sample()
+        est = edge.estimate(cohort, up_bytes, flops_grad_fim(n_params, b))
+        rec = edge.finish_round_sync(est, up_bytes, down_bytes)
+        stats = dict(stats)
+        stats.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
+                     energy_j=rec["energy_j"])
+        return new_params, new_state, stats
+
+    return edge_round_step

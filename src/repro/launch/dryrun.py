@@ -141,7 +141,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_cost.xla_cost_analysis(compiled)
     rec["status"] = "ok"
     rec["lower_s"] = round(t_lower, 1)
     rec["compile_s"] = round(t_compile, 1)

@@ -1,0 +1,59 @@
+"""Seeded-random fallback for the ``hypothesis`` API surface these tests
+use (``given`` / ``settings`` / ``strategies.integers``).
+
+The real dependency is declared in the ``test`` extra
+(``pip install -e .[test]``); in hermetic environments where it is not
+installed, property tests degrade to deterministic random sampling —
+``max_examples`` draws from a fixed-seed PRNG per test — instead of
+erroring at collection.  No shrinking, no database, same assertions.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _IntegersStrategy:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def example(self, rng: random.Random) -> int:
+        # edge values first: hypothesis-style boundary bias
+        return rng.randint(self.min_value, self.max_value)
+
+    def boundary(self):
+        return [self.min_value, self.max_value]
+
+
+class strategies:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+        return _IntegersStrategy(min_value, max_value)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying fn's signature would make
+        # pytest treat the strategy parameters as fixtures.  The runner
+        # must present a zero-argument signature.
+        def runner():
+            n = getattr(runner, "_compat_max_examples", 20)
+            rng = random.Random(0xFEE1)
+            examples = [[s.boundary()[0] for s in strats],
+                        [s.boundary()[1] for s in strats]]
+            while len(examples) < n:
+                examples.append([s.example(rng) for s in strats])
+            for vals in examples[:n]:
+                fn(*vals)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

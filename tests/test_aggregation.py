@@ -1,7 +1,10 @@
 """Aggregation rule properties (Eq. 1 / Eq. 11)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: seeded-random fallback, same assertions
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import aggregation
 

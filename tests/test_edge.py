@@ -1,0 +1,287 @@
+"""Unit + integration tests for repro.edge (the resource-constrained
+wireless runtime): channel/device cost monotonicity, scheduling policies,
+staleness weighting, the event clock, and sync-vs-async end-to-end."""
+import numpy as np
+import pytest
+
+from repro.edge import (AsyncAggregator, CapacityProportionalScheduler, Channel,
+                        ChannelConfig, ClientEstimate, DeadlineScheduler,
+                        DeviceConfig, DeviceFleet, EdgeConfig,
+                        EnergyThresholdScheduler, EventClock,
+                        UniformScheduler, staleness_weights)
+from repro.edge.device import flops_grad_fim, flops_local_sgd
+
+
+# ---------------------------------------------------------------- channel
+def test_uplink_time_monotone_in_bytes():
+    ch = Channel(ChannelConfig(fading="none"), num_clients=8, seed=0)
+    t1 = ch.uplink_time_s(1e6, range(8))
+    t2 = ch.uplink_time_s(2e6, range(8))
+    assert (t2 > t1).all()
+    np.testing.assert_allclose(t2, 2 * t1, rtol=1e-12)
+
+
+def test_uplink_time_monotone_in_snr():
+    slow = Channel(ChannelConfig(snr_db_mean=0.0, snr_db_std=0.0,
+                                 fading="none"), 8, seed=0)
+    fast = Channel(ChannelConfig(snr_db_mean=20.0, snr_db_std=0.0,
+                                 fading="none"), 8, seed=0)
+    assert (fast.uplink_time_s(1e6, range(8))
+            < slow.uplink_time_s(1e6, range(8))).all()
+
+
+def test_uplink_energy_is_power_times_time():
+    cfg = ChannelConfig(tx_power_w=0.25, fading="none")
+    ch = Channel(cfg, 4, seed=1)
+    t = ch.uplink_time_s(5e5, range(4))
+    np.testing.assert_allclose(ch.uplink_energy_j(5e5, range(4)), 0.25 * t)
+
+
+def test_tree_round_time_scales_with_depth():
+    cfg = ChannelConfig(fading="none", snr_db_std=0.0, topology="tree")
+    ch = Channel(cfg, 16, seed=0)
+    hop = float(ch.uplink_time_s(1e6, range(16)).max())  # homogeneous fleet
+    drain = 8e6 / cfg.server_rate_bps
+    # aggregatable: ceil(log2 16) = 4 hops + ONE payload over the server slice
+    assert ch.comm_round_time_s(1e6, range(16)) == pytest.approx(4 * hop + drain)
+    # non-aggregatable: all 16 payloads still cross the root link
+    assert (ch.comm_round_time_s(1e6, range(16), aggregatable=False)
+            == pytest.approx(4 * hop + 16 * drain))
+
+
+def test_star_round_time_bottlenecks_on_server_slice():
+    cfg = ChannelConfig(fading="none", snr_db_std=0.0, server_rate_bps=1e6)
+    ch = Channel(cfg, 8, seed=0)
+    air = float(ch.uplink_time_s(1e6, range(8)).max())
+    assert ch.comm_round_time_s(1e6, range(8)) == pytest.approx(
+        max(air, 8 * 8e6 / 1e6))
+    # doubling the cohort doubles the shared-slice drain
+    ch16 = Channel(cfg, 16, seed=0)
+    assert (ch16.comm_round_time_s(1e6, range(16))
+            > ch.comm_round_time_s(1e6, range(8)))
+
+
+def test_fading_redraws_rates():
+    ch = Channel(ChannelConfig(fading="rayleigh"), 32, seed=0)
+    r1 = ch.rates_bps.copy()
+    r2 = ch.sample()
+    assert not np.allclose(r1, r2)
+
+
+# ----------------------------------------------------------------- device
+def test_compute_time_monotone_in_flops():
+    fleet = DeviceFleet(DeviceConfig(), 8, seed=0)
+    assert (fleet.compute_time_s(2e9, range(8))
+            > fleet.compute_time_s(1e9, range(8))).all()
+    assert flops_grad_fim(1000, 50) > flops_local_sgd(1000, 50, 1) / 6 * 2
+    assert flops_local_sgd(1000, 50, 4) == 4 * flops_local_sgd(1000, 50, 1)
+
+
+def test_battery_drains_and_floors_at_zero():
+    fleet = DeviceFleet(DeviceConfig(battery_j=10.0), 4, seed=0)
+    fleet.spend([0, 1], [4.0, 25.0])
+    assert fleet.battery_j[0] == pytest.approx(6.0)
+    assert fleet.battery_j[1] == 0.0
+    assert list(fleet.alive([0, 1, 2])) == [0, 2]
+
+
+def test_fleet_heterogeneity():
+    fleet = DeviceFleet(DeviceConfig(flops_per_s_sigma=1.0), 64, seed=0)
+    assert fleet.flops_per_s.max() / fleet.flops_per_s.min() > 3.0
+    homog = DeviceFleet(DeviceConfig(flops_per_s_sigma=0.0), 64, seed=0)
+    assert np.ptp(homog.flops_per_s) == 0.0
+
+
+# -------------------------------------------------------------- scheduler
+def _est(times, energies=None, batteries=None):
+    n = len(times)
+    return ClientEstimate(
+        clients=np.arange(n), time_s=np.asarray(times, float),
+        energy_j=np.asarray(energies if energies is not None else [1.0] * n),
+        battery_j=np.asarray(batteries if batteries is not None
+                             else [np.inf] * n))
+
+
+def test_uniform_scheduler_selects_k():
+    sel, drop = UniformScheduler().select(3, _est([1.0] * 10),
+                                          np.random.default_rng(0))
+    assert len(sel) == 3 and drop == []
+
+
+def test_deadline_scheduler_drops_stragglers():
+    est = _est([0.1, 0.2, 10.0, 0.3, 20.0])
+    sel, drop = DeadlineScheduler(deadline_s=1.0).select(
+        5, est, np.random.default_rng(0))
+    assert sorted(sel) == [0, 1, 3]
+    assert sorted(drop) == [2, 4]
+
+
+def test_deadline_scheduler_keeps_min_clients():
+    est = _est([5.0, 9.0, 7.0])
+    sel, drop = DeadlineScheduler(deadline_s=1.0, min_clients=2).select(
+        3, est, np.random.default_rng(0))
+    assert sorted(sel) == [0, 2]  # the two fastest despite missing deadline
+
+
+def test_energy_threshold_excludes_depleted_and_expensive():
+    est = _est([1.0] * 4, energies=[0.5, 0.5, 5.0, 0.5],
+               batteries=[10.0, 0.05, 10.0, 10.0])
+    sched = EnergyThresholdScheduler(battery_floor_j=0.1, round_budget_j=2.0)
+    sel, excl = sched.select(4, est, np.random.default_rng(0))
+    assert sorted(sel) == [0, 3]
+    assert sorted(excl) == [1, 2]  # 1 depleted, 2 over budget
+
+
+def test_capacity_proportional_prefers_fast_clients():
+    est = _est([0.01] + [10.0] * 9)
+    rng = np.random.default_rng(0)
+    hits = sum(0 in CapacityProportionalScheduler().select(1, est, rng)[0]
+               for _ in range(50))
+    assert hits > 45  # fast client ~1000x more likely than any slow one
+
+
+# -------------------------------------------------------- async staleness
+def test_staleness_weights_sum_to_one_and_discount():
+    w = staleness_weights([10, 10, 10], [0, 1, 4], alpha=0.5)
+    assert w.sum() == pytest.approx(1.0)
+    assert w[0] > w[1] > w[2]
+    flat = staleness_weights([2, 1], [3, 3], alpha=0.0)  # alpha=0: n_i only
+    np.testing.assert_allclose(flat, [2 / 3, 1 / 3])
+    assert staleness_weights([], [], 0.5).size == 0
+
+
+def test_event_clock_orders_and_advances():
+    clk = EventClock()
+    clk.push(5.0, "b")
+    clk.push(1.0, "a")
+    clk.push_after(2.0, "c")
+    assert [clk.pop().kind for _ in range(3)] == ["a", "c", "b"]
+    assert clk.now == 5.0
+    with pytest.raises(ValueError):
+        clk.push(1.0)  # in the past
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_async_aggregator_buffers_in_arrival_order():
+    clk = EventClock()
+    agg = AsyncAggregator(clk, buffer_size=2, alpha=0.5)
+    agg.submit(0, 3.0, 10, "slow")
+    agg.submit(1, 1.0, 10, "fast")
+    agg.submit(2, 2.0, 10, "mid")
+    entries, w = agg.pop_buffer()
+    assert [e.payload for e in entries] == ["fast", "mid"]
+    assert clk.now == pytest.approx(2.0)       # waits for 2nd arrival only
+    assert w.sum() == pytest.approx(1.0)
+    assert agg.version == 1 and agg.in_flight == 1
+    # the straggler lands in the next buffer, one version stale
+    entries2, w2 = agg.pop_buffer()
+    assert [e.payload for e in entries2] == ["slow"]
+    assert entries2[0].version == 0 and agg.version == 2
+
+
+# ------------------------------------------------------------ end-to-end
+def _fed_run(edge, alg="fim_lbfgs", rounds=3, seed=0):
+    from repro.configs.base import FedConfig
+    from repro.configs.paper_models import FMNIST_CNN, reduced
+    from repro.data.synthetic import make_classification
+    from repro.fed.server import FederatedRun
+
+    mcfg = reduced(FMNIST_CNN)
+    train, test = make_classification(mcfg, n_train=400, n_test=100,
+                                      seed=seed, noise=0.5)
+    fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                     batch_size=64, rounds=rounds, noniid_l=2, seed=seed,
+                     edge=edge)
+    run = FederatedRun(mcfg, fcfg, train, test, alg)
+    run.last_history = run.run(rounds=rounds, eval_every=rounds)
+    return run
+
+
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.2)
+SLOW_UPLINK = ChannelConfig(bandwidth_hz=2e5, fading="none")
+
+
+def test_ledger_agrees_between_sync_and_async_for_identical_cohorts():
+    """Bytes are scheduler-independent: with full participation and a
+    full-cohort buffer, sync and async dispatch identical cohorts, so the
+    ledgers must match field for field; only times differ."""
+    sync = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO))
+    asyn = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO,
+                               mode="async", buffer_size=8))
+    for f in ("down_bytes", "up_star_bytes", "up_tree_bytes",
+              "scalar_bytes", "rounds"):
+        assert getattr(sync.ledger, f) == getattr(asyn.ledger, f), f
+    assert sync.ledger.summary() == asyn.ledger.summary()
+
+
+def test_async_small_buffer_beats_sync_wall_clock():
+    """With stragglers, a half-cohort buffer finishes rounds earlier than
+    the synchronous barrier at the slowest client."""
+    sync = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), rounds=4)
+    asyn = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO,
+                               mode="async", buffer_size=4), rounds=4)
+    assert asyn.edge.summary()["wall_clock_s"] < sync.edge.summary()["wall_clock_s"]
+    assert np.isfinite([h["loss"] for h in asyn.last_history]).all()
+
+
+def test_async_rejected_for_nonsummable_algorithms():
+    with pytest.raises(ValueError, match="async"):
+        _fed_run(EdgeConfig(mode="async"), alg="fedova", rounds=1)
+
+
+def test_deadline_scheduler_advances_faster_than_uniform():
+    """Heterogeneous fleet: dropping predicted stragglers cuts the
+    per-round barrier, so simulated time for the same round count shrinks."""
+    uni = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), rounds=3)
+    ddl = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO,
+                              scheduler="deadline", deadline_s=2.0,
+                              min_clients=2), rounds=3)
+    assert ddl.edge.summary()["wall_clock_s"] < uni.edge.summary()["wall_clock_s"]
+
+
+def test_energy_threshold_run_excludes_depleted_clients():
+    edge = EdgeConfig(channel=SLOW_UPLINK,
+                      device=DeviceConfig(flops_per_s_mean=2e9,
+                                          battery_j=3.0),
+                      scheduler="energy_threshold", battery_floor_j=0.5)
+    run = _fed_run(edge, rounds=4)
+    s = run.edge.summary()
+    assert s["dropped_total"] > 0 or s["depleted_clients"] > 0
+
+
+def test_edge_history_reports_time_and_energy():
+    run = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), rounds=2)
+    s = run.edge.summary()
+    assert s["wall_clock_s"] > 0 and s["energy_j"] > 0 and s["rounds"] == 2
+
+
+def test_simulator_with_edge_wrapper():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.paper_models import FMNIST_CNN, reduced
+    from repro.core import fim_lbfgs
+    from repro.data.synthetic import make_classification
+    from repro.edge.runtime import EdgeRuntime
+    from repro.fed.simulator import make_round_step, with_edge
+    from repro.models import cnn
+
+    mcfg = reduced(FMNIST_CNN)
+    params, _ = cnn.init(mcfg, jax.random.PRNGKey(0))
+    ocfg = fim_lbfgs.FimLbfgsConfig(learning_rate=1.0, m=5, damping=1e-2,
+                                    max_step_norm=1.0)
+    step = make_round_step(lambda p, b: cnn.softmax_loss(p, mcfg, b),
+                           cnn.per_example_loss_fn(mcfg), ocfg)
+    edge = EdgeRuntime(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), 8)
+    n_params = sum(int(l.size) for l in jax.tree.leaves(params))
+    estep = with_edge(step, edge, n_params)
+    train, _ = make_classification(mcfg, n_train=256, n_test=64, seed=0)
+    rng = np.random.default_rng(0)
+    opt = fim_lbfgs.init(params, ocfg)
+    for _ in range(2):
+        idx = rng.integers(0, len(train.x), size=(8, 32))
+        cohort = {"x": jnp.asarray(train.x[idx]),
+                  "y": jnp.asarray(train.y[idx])}
+        params, opt, stats = estep(params, opt, cohort, jnp.ones(8))
+    assert stats["wall_s"] > 0 and stats["sim_time_s"] > stats["wall_s"] / 2
+    assert edge.summary()["rounds"] == 2

@@ -1,6 +1,9 @@
 """Property tests for the non-IID-l partitioner (paper Sec. VI-A Remark)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: seeded-random fallback, same assertions
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data.partition import labels_per_client, noniid_partition
 
