@@ -16,8 +16,6 @@ selection vs the paper's uniform sampling.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import FMNIST_CNN, reduced
 from repro.data.synthetic import make_classification

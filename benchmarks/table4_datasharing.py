@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import FMNIST_CNN, reduced
-from repro.data.synthetic import Dataset, make_classification
+from repro.data.synthetic import make_classification
 from repro.fed.server import FederatedRun
 
 from benchmarks.common import emit

@@ -8,7 +8,7 @@ resolves ``--arch`` flags for the launcher / dry-run / benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
@@ -154,11 +154,31 @@ class FedConfig:
     rounds: int = 50             # T
     noniid_l: int = 0            # 0 = IID, else labels per client
     compress: str = "none"       # "int8" = stochastic-rounding uploads (4x)
+    fim_mode: str = "per_example"  # Eq. 9 diagonal: "per_example" (exact)
+                                   # | "microbatch" (squared-grad proxy)
+    prox_mu: float = 0.1         # FedProx proximal coefficient
     seed: int = 0
     # Optional resource-constrained edge simulation (repro.edge): wireless
     # channels, heterogeneous devices, scheduling, async aggregation.
     # None = the paper's cost-free instantaneous clients (default).
     edge: Optional["EdgeConfig"] = None
+
+    def __post_init__(self) -> None:
+        if self.compress not in ("none", "int8"):
+            raise ValueError(
+                f"FedConfig.compress must be 'none' or 'int8', "
+                f"got {self.compress!r}")
+        if self.fim_mode not in ("per_example", "microbatch"):
+            raise ValueError(
+                f"FedConfig.fim_mode must be 'per_example' or 'microbatch', "
+                f"got {self.fim_mode!r}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"FedConfig.participation must be in (0, 1], "
+                f"got {self.participation}")
+        if self.prox_mu < 0.0:
+            raise ValueError(
+                f"FedConfig.prox_mu must be >= 0, got {self.prox_mu}")
 
 
 _REGISTRY: dict[str, ArchConfig] = {}

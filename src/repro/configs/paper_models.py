@@ -8,10 +8,9 @@ CNN classifiers used in Tables II-V / Figs 3-4:
 These run end-to-end on CPU with the federated runtime; channel widths are
 faithful, and reduced variants are used where tests need speed.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
-from repro.configs.base import register, ArchConfig
 
 
 @dataclass(frozen=True)

@@ -21,7 +21,6 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.utils.pytree import tree_mul
 
 
 class FimState(NamedTuple):

@@ -14,7 +14,6 @@ are scheduler-independent — only WHO transmits and WHEN it lands.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Optional
 

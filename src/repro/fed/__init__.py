@@ -1,1 +1,1 @@
-from repro.fed import client, server, simulator  # noqa: F401
+from repro.fed import client, server, simulator, strategies  # noqa: F401

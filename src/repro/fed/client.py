@@ -11,6 +11,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import baselines, fim
 
@@ -93,11 +94,32 @@ def make_feddane_fn(loss_fn: Callable):
     return local_dane
 
 
+def make_fedprox_fn(loss_fn: Callable):
+    """FedProx client [Li et al., MLSys 2020]: inner SGD on the proximal
+    objective  F_k(w) + (mu/2)||w - w_t||²  — bounds local drift under
+    non-IID data."""
+
+    @functools.partial(jax.jit, static_argnames=("lr", "mu"))
+    def local_prox(params, batches, lr: float, mu: float):
+        start = params
+
+        def step(p, batch):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            g = jax.tree.map(
+                lambda gi, w, w0: gi + mu * (w - w0).astype(gi.dtype),
+                g, p, start)
+            p = jax.tree.map(lambda w, gi: w - lr * gi.astype(w.dtype), p, g)
+            return p, loss
+
+        params, losses = jax.lax.scan(step, params, batches)
+        return params, jnp.mean(losses)
+
+    return local_prox
+
+
 def stack_batches(xs, ys, batch_size: int, epochs: int, rng):
     """Materialize E epochs of shuffled minibatches as stacked arrays for
     lax.scan (static shapes: drops ragged tails)."""
-    import numpy as np
-
     n = len(xs)
     bs = min(batch_size, n)
     nb = max(1, n // bs)

@@ -20,7 +20,7 @@ cites as [27], [28]): per-tensor symmetric int8 with stochastic rounding —
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

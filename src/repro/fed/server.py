@@ -1,23 +1,30 @@
 """Server-side federated orchestration (paper Sec. III-A pipeline).
 
-Implements every training scheme the paper evaluates:
-  * "fim_lbfgs"   — Algorithm 1 (the paper's optimizer)
-  * "fedavg_sgd"  — FedAvg with local SGD [McMahan et al.]
-  * "fedavg_adam" — FedAvg with a server-side Adam on the aggregated
-                    pseudo-gradient (FedOpt reading of "FedAvg-based Adam")
-  * "feddane"     — FedDANE two-phase Newton-type rounds [Li et al.]
-  * "fedova"      — Algorithm 2 (OVA components + grouped aggregation),
-                    optionally driven by the FIM-L-BFGS server step
-                    ("fedova_lbfgs"), demonstrating the paper's claim that
-                    the two contributions compose.
+``FederatedRun`` is a *generic* round driver over the pluggable
+:mod:`repro.fed.strategies` registry — it never branches on the algorithm
+name.  Each registered strategy declares its per-round resource footprint
+(a ``RoundPlan``) and supplies client/aggregate/server steps; the driver
+owns everything algorithm-independent:
 
-The run loop mimics the paper's experimental protocol: K clients, fraction
-q sampled per round, E local epochs, batch size B, non-IID-l partitions.
+  * client sampling (optionally through the repro.edge scheduler, fed by
+    the plan's predicted bytes and FLOPs),
+  * CommLedger metering, driven once per round from the plan — the
+    ledger's actuals equal the plan's prediction by construction,
+  * int8 upload compression (``comm.roundtrip``) for compressible plans,
+  * synchronous edge finishing and buffered-async aggregation — async is
+    available to any strategy whose plan marks its payload ``summable``.
+
+Registered algorithms: "fim_lbfgs" (Algorithm 1), "fedavg_sgd",
+"fedavg_adam", "fedprox", "feddane", "fedova" / "fedova_lbfgs"
+(Algorithm 2, optionally composed with the FIM-L-BFGS server step).
+
+The run loop mimics the paper's experimental protocol: K clients,
+fraction q sampled per round, E local epochs, batch size B, non-IID-l
+partitions.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,17 +32,16 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import CNNConfig
-from repro.core import aggregation, baselines, fedova, fim_lbfgs
-from repro.edge import device as edge_device
-from repro.edge.runtime import EdgeRuntime
-from repro.fed import comm
 from repro.data.partition import noniid_partition
 from repro.data.synthetic import Dataset
-from repro.fed import client as fed_client
-from repro.models import cnn
+from repro.edge.runtime import EdgeRuntime
+from repro.fed import comm, strategies
 
 
 class FederatedRun:
+    """Generic federated round driver: ``algorithm`` resolves through the
+    strategy registry; everything per-algorithm lives in the strategy."""
+
     def __init__(self, model_cfg: CNNConfig, fed_cfg: FedConfig,
                  train: Dataset, test: Dataset, algorithm: str):
         self.mcfg = model_cfg
@@ -44,119 +50,44 @@ class FederatedRun:
         self.algorithm = algorithm
         self.rng = np.random.default_rng(fed_cfg.seed)
         self.ledger = comm.CommLedger()
-        self.compress = getattr(fed_cfg, "compress", "none")
+        self.compress = fed_cfg.compress
         self._qkey = jax.random.PRNGKey(fed_cfg.seed + 17)
         self.partition = noniid_partition(
             train.y, fed_cfg.num_clients, fed_cfg.noniid_l, train.n_classes,
             seed=fed_cfg.seed,
         )
-        key = jax.random.PRNGKey(fed_cfg.seed)
-        self.is_ova = algorithm.startswith("fedova")
-        if self.is_ova:
-            bcfg = model_cfg.binary()
-            self.bcfg = bcfg
-            self.model = fedova.OvaModel(
-                components=jax.vmap(lambda k: cnn.init(bcfg, k)[0])(
-                    jax.random.split(key, train.n_classes)),
-                n_classes=train.n_classes,
-            )
-            self._binary_loss = lambda p, b: cnn.binary_loss(p, bcfg, b)
-            self._local_sgd = fed_client.make_local_sgd_fn(self._binary_loss)
-            self._apply = jax.jit(lambda p, x: cnn.apply(p, bcfg, x))
-            if algorithm == "fedova_lbfgs":
-                ocfg = fim_lbfgs.FimLbfgsConfig(
-                    learning_rate=fed_cfg.second_order_lr, m=fed_cfg.lbfgs_m,
-                    damping=fed_cfg.fim_damping, fim_ema=fed_cfg.fim_ema,
-                    max_step_norm=fed_cfg.max_step_norm)
-                self.ocfg = ocfg
-                one = jax.tree.map(lambda l: l[0], self.model.components)
-                self.opt_state = jax.vmap(lambda _: fim_lbfgs.init(one, ocfg))(
-                    jnp.arange(train.n_classes))
-                self._grad_fim = fed_client.make_grad_fim_fn(
-                    self._binary_loss, cnn.per_example_loss_fn(bcfg, binary=True),
-                    fed_cfg.fim_mode if hasattr(fed_cfg, "fim_mode") else "per_example")
-        else:
-            self.params, _ = cnn.init(model_cfg, key)
-            self._loss = lambda p, b: cnn.softmax_loss(p, model_cfg, b)
-            self._local_sgd = fed_client.make_local_sgd_fn(self._loss)
-            self._local_adam = fed_client.make_local_adam_fn(self._loss)
-            self._dane = fed_client.make_feddane_fn(self._loss)
-            self._grad_fim = fed_client.make_grad_fim_fn(
-                self._loss, cnn.per_example_loss_fn(model_cfg), "per_example")
-            self.opt_state, self._opt_update = baselines.make(
-                "fim_lbfgs" if algorithm == "fim_lbfgs" else "fedavg_sgd",
-                self.params, fed_cfg)
-        self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, model_cfg, x, y))
+        self.strategy = strategies.get(algorithm)(
+            model_cfg, fed_cfg, train.n_classes)
+        self.plan = self.strategy.round_plan()
         # ---- optional resource-constrained edge simulation (repro.edge)
-        edge_cfg = getattr(fed_cfg, "edge", None)
         self.edge: Optional[EdgeRuntime] = None
-        if edge_cfg is not None:
-            if edge_cfg.mode == "async" and (
-                    self.is_ova or algorithm == "feddane"):
+        if fed_cfg.edge is not None:
+            if fed_cfg.edge.mode == "async" and not self.plan.summable:
                 raise ValueError(
                     "async edge mode needs summable client payloads; "
                     f"{algorithm!r} supports sync edge simulation only")
-            self.edge = EdgeRuntime(edge_cfg, fed_cfg.num_clients,
+            self.edge = EdgeRuntime(fed_cfg.edge, fed_cfg.num_clients,
                                     fed_cfg.seed)
         self._edge_est = None
-        self._n_params_cache: Optional[int] = None
         self._flops_cache: dict[int, float] = {}
 
     # ------------------------------------------------------------------
-    # edge planning: payload bytes + client FLOPs per round, per algorithm
-    # (parameter counts and partition sizes are run-constant -> cached)
-    def _n_params(self) -> int:
-        if self._n_params_cache is None:
-            if self.is_ova:
-                one = jax.tree.map(lambda l: l[0], self.model.components)
-                self._n_params_cache = comm.tree_n_floats(one)
-            else:
-                self._n_params_cache = comm.tree_n_floats(self.params)
-        return self._n_params_cache
+    # convenience views into the strategy (examples/benchmarks poke these)
+    @property
+    def params(self):
+        return getattr(self.strategy, "params", None)
 
-    def _ova_classes_per_client(self) -> int:
-        n_cls = self.train.n_classes
-        return min(self.fcfg.noniid_l or n_cls, n_cls)
+    @property
+    def model(self):
+        return getattr(self.strategy, "model", None)
 
-    def _plan_upload_bytes(self) -> float:
-        """Predicted per-client upload bytes per round (matches the ledger)."""
-        d = self._n_params()
-        per_el = comm.BYTES_INT8 if self.compress == "int8" else comm.BYTES_F32
-        if self.algorithm == "fim_lbfgs":
-            return 2.0 * d * per_el                 # ∇F_k and Γ_k
-        if self.algorithm == "feddane":
-            return 2.0 * d * comm.BYTES_F32         # gradient + model phases
-        if self.is_ova:
-            return float(d * self._ova_classes_per_client() * comm.BYTES_F32)
-        return float(d * comm.BYTES_F32)            # local model
-
-    def _plan_downlink_bytes(self) -> float:
-        d = self._n_params()
-        if self.is_ova:
-            return float(d * self.train.n_classes * comm.BYTES_F32)
-        if self.algorithm == "feddane":
-            return 2.0 * d * comm.BYTES_F32         # ω_t then global gradient
-        return float(d * comm.BYTES_F32)
-
+    # ------------------------------------------------------------------
+    # planning: the strategy's RoundPlan feeds scheduling + estimation
     def _plan_flops(self, k: int) -> float:
-        if k in self._flops_cache:
-            return self._flops_cache[k]
-        self._flops_cache[k] = self._plan_flops_uncached(k)
+        """Per-client round FLOPs (partition sizes are run-constant)."""
+        if k not in self._flops_cache:
+            self._flops_cache[k] = self.plan.flops(len(self.partition[k]))
         return self._flops_cache[k]
-
-    def _plan_flops_uncached(self, k: int) -> float:
-        n = len(self.partition[k])
-        p = self._n_params()
-        e = self.fcfg.local_epochs
-        if self.algorithm == "fim_lbfgs":
-            return edge_device.flops_grad_fim(p, n)
-        if self.algorithm == "feddane":
-            return (edge_device.flops_grad_fim(p, n)
-                    + edge_device.flops_local_sgd(p, n, e))
-        if self.is_ova:
-            return (edge_device.flops_local_sgd(p, n, e)
-                    * self._ova_classes_per_client())
-        return edge_device.flops_local_sgd(p, n, e)
 
     # ------------------------------------------------------------------
     def sample_clients(self) -> list[int]:
@@ -170,24 +101,35 @@ class FederatedRun:
             eligible = [i for i in eligible if i not in self.edge.busy]
         flops = np.asarray([self._plan_flops(i) for i in eligible])
         selected, est = self.edge.select(
-            k, eligible, self._plan_upload_bytes(), flops)
+            k, eligible, self.plan.upload_bytes(), flops)
         self._edge_est = est
         return selected
 
+    def _meter_round(self, n_selected: int) -> None:
+        """CommLedger metering, generically from the plan: the ledger's
+        actuals are the plan's predictions by construction."""
+        for ph in self.plan.phases:
+            if ph.down_floats:
+                self.ledger.broadcast(ph.down_floats, n_selected)
+            if ph.up_floats:
+                self.ledger.upload(ph.up_floats, n_selected, ph.up_width,
+                                   aggregatable=ph.aggregatable)
+        n_scalars = (self.plan.round_scalars
+                     + self.plan.scalars_per_client * n_selected)
+        if n_scalars:
+            self.ledger.scalars(n_scalars)
+        self.ledger.end_round()
+
     def _edge_sync_finish(self, info: dict) -> dict:
         if self.edge is not None and self.edge.async_agg is None:
-            # gradient/FIM (and per-class OVA component) uploads sum in the
-            # network; FedAvg local-model uploads do not; FedDANE is half
-            # and half (phase-1 gradients sum, phase-2 models do not —
-            # matching the ledger's aggregatable flags above)
-            aggregatable = self.algorithm == "fim_lbfgs" or self.is_ova
-            nonagg = None
-            if self.algorithm == "feddane":
-                nonagg = self._n_params() * comm.BYTES_F32  # the model phase
+            # the plan's aggregatable flags say which uploads sum in the
+            # network (gradients/FIM/OVA components) and which must reach
+            # the root individually (local models); mixed plans (FedDANE)
+            # carve out the non-aggregatable share
             rec = self.edge.finish_round_sync(
-                self._edge_est, self._plan_upload_bytes(),
-                self._plan_downlink_bytes(), aggregatable=aggregatable,
-                nonagg_bytes=nonagg)
+                self._edge_est, self.plan.upload_bytes(),
+                self.plan.downlink_bytes(),
+                nonagg_bytes=self.plan.nonagg_upload_bytes())
             info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
                         energy_j=rec["energy_j"])
         return info
@@ -198,209 +140,50 @@ class FederatedRun:
 
     # ------------------------------------------------------------------
     def round(self) -> dict:
+        """One generic federated round: meter from the plan, run the
+        optional cohort pre-phase, collect client payloads, then either
+        dispatch into the async buffer or aggregate synchronously."""
         selected = self.sample_clients()
-        if self.is_ova:
-            return self._round_fedova(selected)
-        if self.algorithm == "fim_lbfgs":
-            return self._round_fim_lbfgs(selected)
-        if self.algorithm == "feddane":
-            return self._round_feddane(selected)
-        return self._round_fedavg(selected)
-
-    def _round_fim_lbfgs(self, selected) -> dict:
-        grads, fims, weights, losses = [], [], [], []
-        d = comm.tree_n_floats(self.params)
-        self.ledger.broadcast(d, len(selected))          # send ω_t
-        for k in selected:
-            xs, ys = self._client_data(k)
-            # Full local gradient/Fisher (the ERM F_k over D_k, as in
-            # DANE/GIANT); stochastic batches are exercised by the
-            # LLM-scale path where full data is impossible.
-            batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
-            g, f, l = self._grad_fim(self.params, batch)
-            if self.compress == "int8":
-                self._qkey, k1, k2 = jax.random.split(self._qkey, 3)
-                g = comm.roundtrip(g, k1)
-                f = jax.tree.map(jnp.abs, comm.roundtrip(f, k2))
-            grads.append(g); fims.append(f); weights.append(len(xs))
-            losses.append(float(l))
-        per_el = comm.BYTES_INT8 if self.compress == "int8" else comm.BYTES_F32
-        self.ledger.upload(d, len(selected), per_el)     # ∇F_k uploads
-        self.ledger.upload(d, len(selected), per_el)     # Γ_k uploads
-        m = self.fcfg.lbfgs_m
-        self.ledger.scalars((2 * m + 1) ** 2)            # Gram exchange (m²)
-        self.ledger.end_round()
+        self._meter_round(len(selected))
+        datas = [self._client_data(i) for i in selected]
+        context = self.strategy.round_context(datas, self.rng)
+        payloads, weights, losses = [], [], []
+        for j, data in enumerate(datas):
+            payload, loss = self.strategy.client_step(
+                data, self.rng, None if context is None else context[j])
+            if self.compress == "int8" and self.plan.compressible:
+                self._qkey, sub = jax.random.split(self._qkey)
+                payload = self.strategy.compress_payload(payload, sub)
+            payloads.append(payload)
+            weights.append(len(data[0]))
+            losses.append(loss)
         info = {"loss": float(np.mean(losses)) if losses else float("nan")}
         if self.edge is not None and self.edge.async_agg is not None:
             # buffered async: dispatch this cohort, aggregate whatever
             # buffer of (possibly stale) results arrives first
-            self.edge.dispatch_async(self._edge_est, weights,
-                                     list(zip(grads, fims)),
-                                     self._plan_downlink_bytes())
+            self.edge.dispatch_async(self._edge_est, weights, payloads,
+                                     self.plan.downlink_bytes())
             entries, w_st = self.edge.pop_async_buffer()
             if entries:
-                wj = jnp.asarray(w_st, jnp.float32)
-                grad = aggregation.weighted_mean(
-                    jax.tree.map(lambda *t: jnp.stack(t),
-                                 *[e.payload[0] for e in entries]), wj)
-                fimd = aggregation.weighted_mean(
-                    jax.tree.map(lambda *t: jnp.stack(t),
-                                 *[e.payload[1] for e in entries]), wj)
-                self.params, self.opt_state, _ = self._opt_update(
-                    self.opt_state, self.params, grad, fimd)
+                agg = self.strategy.aggregate(
+                    [e.payload for e in entries],
+                    jnp.asarray(w_st, jnp.float32))
+                self.strategy.server_step(agg)
             rec = self.edge.history[-1]
             info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
                         energy_j=rec["energy_j"], aggregated=len(entries))
             return info
-        if grads:
-            w = jnp.asarray(weights, jnp.float32)
-            grad = aggregation.weighted_mean(
-                jax.tree.map(lambda *t: jnp.stack(t), *grads), w)
-            fimd = aggregation.weighted_mean(
-                jax.tree.map(lambda *t: jnp.stack(t), *fims), w)
-            self.params, self.opt_state, stats = self._opt_update(
-                self.opt_state, self.params, grad, fimd)
+        if payloads:
+            agg = self.strategy.aggregate(
+                payloads, jnp.asarray(weights, jnp.float32))
+            self.strategy.server_step(agg)
         return self._edge_sync_finish(info)
-
-    def _round_fedavg(self, selected) -> dict:
-        results, weights, losses = [], [], []
-        d = comm.tree_n_floats(self.params)
-        self.ledger.broadcast(d, len(selected))
-        # FedAvg-type uploads are NOT tree-aggregatable with weights alone
-        # in the paper's accounting (server receives k local models): the
-        # O(kd) of Theorem 3's comparison.
-        self.ledger.upload(d, len(selected), aggregatable=False)
-        self.ledger.end_round()
-        for k in selected:
-            xs, ys = self._client_data(k)
-            batches = fed_client.stack_batches(
-                xs, ys, self.fcfg.batch_size, self.fcfg.local_epochs, self.rng)
-            if self.algorithm == "fedavg_adam":
-                # Table II's "FedAvg-based Adam": clients run local Adam,
-                # server averages (Adam lr convention: ~10x smaller).
-                p, l = self._local_adam(self.params, batches,
-                                        lr=float(self.fcfg.learning_rate) * 0.1)
-            else:
-                p, l = self._local_sgd(self.params, batches,
-                                       lr=float(self.fcfg.learning_rate))
-            results.append(p); weights.append(len(xs)); losses.append(float(l))
-        info = {"loss": float(np.mean(losses)) if losses else float("nan")}
-        if self.edge is not None and self.edge.async_agg is not None:
-            # async FedAvg aggregates model *deltas* so a stale update is a
-            # (discounted) correction to the current params, not a pull
-            # back toward the stale starting point
-            deltas = [jax.tree.map(lambda a, b: a - b, p, self.params)
-                      for p in results]
-            self.edge.dispatch_async(self._edge_est, weights, deltas,
-                                     self._plan_downlink_bytes())
-            entries, w_st = self.edge.pop_async_buffer()
-            if entries:
-                wj = jnp.asarray(w_st, jnp.float32)
-                delta = aggregation.weighted_mean(
-                    jax.tree.map(lambda *t: jnp.stack(t),
-                                 *[e.payload for e in entries]), wj)
-                self.params = jax.tree.map(lambda p, dl: p + dl,
-                                           self.params, delta)
-            rec = self.edge.history[-1]
-            info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
-                        energy_j=rec["energy_j"], aggregated=len(entries))
-            return info
-        if results:
-            w = jnp.asarray(weights, jnp.float32)
-            stacked = jax.tree.map(lambda *t: jnp.stack(t), *results)
-            self.params = aggregation.weighted_mean(stacked, w)
-        return self._edge_sync_finish(info)
-
-    def _round_feddane(self, selected) -> dict:
-        if not selected:
-            self.ledger.end_round()  # empty rounds still count, as in
-            return self._edge_sync_finish({"loss": float("nan")})  # fedavg
-        d = comm.tree_n_floats(self.params)
-        # phase 1: broadcast w_t, clients upload gradients (aggregatable)
-        self.ledger.broadcast(d, len(selected))
-        grads, weights = [], []
-        for k in selected:
-            xs, ys = self._client_data(k)
-            batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
-            g, _, _ = self._grad_fim(self.params, batch)
-            grads.append(g); weights.append(len(xs))
-        self.ledger.upload(d, len(selected))
-        w = jnp.asarray(weights, jnp.float32)
-        stacked_g = jax.tree.map(lambda *t: jnp.stack(t), *grads)
-        global_grad = aggregation.weighted_mean(stacked_g, w)
-        # phase 2: broadcast the global gradient, clients run corrected
-        # inner solves and upload their local models (NOT aggregatable:
-        # the server averages k distinct iterates — FedDANE's O(2kd))
-        self.ledger.broadcast(d, len(selected))
-        results, losses = [], []
-        for j, k in enumerate(selected):
-            xs, ys = self._client_data(k)
-            batches = fed_client.stack_batches(
-                xs, ys, self.fcfg.batch_size, self.fcfg.local_epochs, self.rng)
-            g0 = jax.tree.map(lambda t: t[j], stacked_g)
-            p, l = self._dane(self.params, batches, global_grad, g0,
-                              lr=float(self.fcfg.learning_rate), mu=0.1)
-            results.append(p); losses.append(float(l))
-        self.ledger.upload(d, len(selected), aggregatable=False)
-        self.ledger.end_round()
-        stacked = jax.tree.map(lambda *t: jnp.stack(t), *results)
-        self.params = aggregation.weighted_mean(stacked, w)
-        return self._edge_sync_finish({"loss": float(np.mean(losses))})
-
-    def _round_fedova(self, selected) -> dict:
-        n = self.model.n_classes
-        d_comp = self._n_params()              # one binary component
-        # server broadcasts the full OVA component stack to each client
-        self.ledger.broadcast(d_comp * n, len(selected))
-        comps, masks, losses = [], [], []
-        for k in selected:
-            xs, ys = self._client_data(k)
-            mask = np.zeros(n, np.float32)
-            client_comp = self.model.components  # start from server components
-            for c in np.unique(ys):
-                c = int(c)
-                mask[c] = 1.0
-                yb = (ys == c).astype(np.int64)
-                batches = fed_client.stack_batches(
-                    xs, yb, self.fcfg.batch_size, self.fcfg.local_epochs, self.rng)
-                comp_c = jax.tree.map(lambda l: l[c], self.model.components)
-                if self.algorithm == "fedova_lbfgs":
-                    big = {"x": batches["x"].reshape((-1,) + batches["x"].shape[2:]),
-                           "y": batches["y"].reshape(-1)}
-                    g, f, l = self._grad_fim(comp_c, big)
-                    ost = jax.tree.map(lambda s: s[c], self.opt_state)
-                    comp_new, ost, _ = fim_lbfgs.update(ost, comp_c, g, f, self.ocfg)
-                    self.opt_state = jax.tree.map(
-                        lambda s, o: s.at[c].set(o), self.opt_state, ost)
-                else:
-                    comp_new, l = self._local_sgd(
-                        comp_c, batches, lr=float(self.fcfg.learning_rate))
-                client_comp = jax.tree.map(
-                    lambda full, new, cc=c: full.at[cc].set(new), client_comp, comp_new)
-                losses.append(float(l))
-            comps.append(client_comp)
-            masks.append(mask)
-        if selected:
-            # each client uploads only the components it trained (its local
-            # label set); the grouped aggregation (Eq. 11) is a per-class
-            # weighted mean, so these uploads ARE tree-aggregatable
-            mean_floats = d_comp * float(np.stack(masks).sum(1).mean())
-            self.ledger.upload(mean_floats, len(selected))
-            self.ledger.scalars(n * len(selected))  # class-presence masks
-            stacked = jax.tree.map(lambda *t: jnp.stack(t), *comps)
-            self.model = fedova.aggregate(
-                self.model, stacked, jnp.asarray(np.stack(masks)))
-        self.ledger.end_round()
-        return self._edge_sync_finish(
-            {"loss": float(np.mean(losses)) if losses else float("nan")})
 
     # ------------------------------------------------------------------
     def evaluate(self, max_examples: int = 2000) -> float:
         x = jnp.asarray(self.test.x[:max_examples])
         y = jnp.asarray(self.test.y[:max_examples])
-        if self.is_ova:
-            return float(fedova.accuracy(self._apply, self.model, x, y))
-        return float(self._eval(self.params, x, y))
+        return self.strategy.evaluate(x, y)
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 5,
             target_accuracy: Optional[float] = None, verbose: bool = False):

@@ -7,7 +7,12 @@ diagonals are computed with vmap, and the aggregation reduces over that dim
 — under pjit with the client dim sharded over the ("pod","data") mesh axes,
 that reduction lowers to exactly one all-reduce per round, the paper's
 O(d log τ) term (see launch/train.py for the LLM-scale equivalent where
-microbatch cohorts play the client role)."""
+microbatch cohorts play the client role).
+
+The cohort client function is the SAME jitted fn the federated loop uses
+(fed/client.py's ``make_grad_fim_fn``) — ``from_strategy`` derives the
+whole round step from a registered strategy object, so the Python-loop
+and vmapped paths cannot drift apart."""
 from __future__ import annotations
 
 from typing import Callable, Optional
@@ -16,10 +21,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, fim, fim_lbfgs
+from repro.core import aggregation, fim_lbfgs
 from repro.edge.device import flops_grad_fim
 from repro.edge.runtime import EdgeRuntime
+from repro.fed import client as fed_client
 from repro.fed import comm
+
+
+def _build_round_step(client_fn: Callable, server_update: Callable):
+    """round_step(params, opt_state, cohort_batch, weights): vmap the
+    per-client fn over the stacked cohort, aggregate once, apply the pure
+    server update."""
+
+    def round_step(params, opt_state, cohort_batch, weights):
+        grads, diags, losses = jax.vmap(client_fn, in_axes=(None, 0))(
+            params, cohort_batch)
+        grad = aggregation.weighted_mean(grads, weights)      # Σ_k (n_k/n) ∇F_k
+        diag = aggregation.weighted_mean(diags, weights)      # Σ_k (n_k/n) Γ_k
+        new_params, new_state, stats = server_update(
+            opt_state, params, grad, diag)
+        stats["loss"] = jnp.mean(losses)
+        return new_params, new_state, stats
+
+    return jax.jit(round_step)
 
 
 def make_round_step(loss_fn: Callable, per_example_loss: Callable | None,
@@ -28,26 +52,27 @@ def make_round_step(loss_fn: Callable, per_example_loss: Callable | None,
 
     cohort_batch: {"x": (K, B, ...), "y": (K, B)} — one stacked batch per
     selected client; weights: (K,) sample counts n_k."""
+    client_fn = fed_client.make_grad_fim_fn(loss_fn, per_example_loss, fim_mode)
 
-    def client_fn(params, batch):
-        loss, grad = jax.value_and_grad(loss_fn)(params, batch)
-        if fim_mode == "per_example" and per_example_loss is not None:
-            diag = fim.per_example_diag(per_example_loss, params, batch["x"], batch["y"])
-        else:
-            diag = fim.microbatch_diag(grad)
-        return grad, diag, loss
+    def server_update(opt_state, params, grad, diag):
+        return fim_lbfgs.update(opt_state, params, grad, diag, ocfg)
 
-    def round_step(params, opt_state, cohort_batch, weights):
-        grads, diags, losses = jax.vmap(client_fn, in_axes=(None, 0))(
-            params, cohort_batch)
-        grad = aggregation.weighted_mean(grads, weights)      # Σ_k (n_k/n) ∇F_k
-        diag = aggregation.weighted_mean(diags, weights)      # Σ_k (n_k/n) Γ_k
-        new_params, new_state, stats = fim_lbfgs.update(
-            opt_state, params, grad, diag, ocfg)
-        stats["loss"] = jnp.mean(losses)
-        return new_params, new_state, stats
+    return _build_round_step(client_fn, server_update)
 
-    return jax.jit(round_step)
+
+def from_strategy(strategy):
+    """Derive the vmapped cohort ``round_step`` from a registered strategy
+    (repro.fed.strategies): the strategy's own jitted client fn and pure
+    server update, so the sequential and mesh-parallel paths share code."""
+    try:
+        client_fn = strategy.cohort_client_fn
+        server_update = strategy.cohort_server_update
+    except AttributeError as e:
+        raise NotImplementedError(
+            f"strategy {getattr(strategy, 'name', strategy)!r} does not "
+            "expose a vmappable cohort path (needs cohort_client_fn + "
+            "cohort_server_update)") from e
+    return _build_round_step(client_fn, server_update)
 
 
 def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
@@ -58,16 +83,34 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
     step, the wrapper advances the edge clock by the synchronous-round
     wall time (per-client grad+FIM compute plus the 2d-float uplink under
     the configured topology) and drains batteries.  stats gains
-    ``wall_s`` / ``sim_time_s`` / ``energy_j`` host-side entries."""
+    ``wall_s`` / ``sim_time_s`` / ``energy_j`` host-side entries.
+
+    The wrapped step takes an optional ``clients`` array — the TRUE
+    selected client ids — so device heterogeneity and battery drain hit
+    the right fleet entries; without it, cohort slot i falls back to
+    fleet entry i (mod fleet size)."""
     per_el = comm.BYTES_INT8 if compress == "int8" else comm.BYTES_F32
     up_bytes = 2.0 * n_params * per_el
     down_bytes = float(n_params * comm.BYTES_F32)
 
-    def edge_round_step(params, opt_state, cohort_batch, weights):
+    def edge_round_step(params, opt_state, cohort_batch, weights,
+                        clients: Optional[np.ndarray] = None):
         new_params, new_state, stats = round_step(
             params, opt_state, cohort_batch, weights)
         k, b = cohort_batch["y"].shape[:2]
-        cohort = np.arange(k) % edge.num_clients
+        if clients is None:
+            cohort = np.arange(k) % edge.num_clients
+        else:
+            cohort = np.asarray(clients, dtype=int)
+            if cohort.shape != (k,):
+                raise ValueError(
+                    f"clients must map each of the {k} cohort slots to a "
+                    f"fleet entry, got shape {cohort.shape}")
+            if cohort.size and (cohort.min() < 0
+                                or cohort.max() >= edge.num_clients):
+                raise ValueError(
+                    f"client ids must be in [0, {edge.num_clients}), "
+                    f"got range [{cohort.min()}, {cohort.max()}]")
         edge.channel.sample()
         est = edge.estimate(cohort, up_bytes, flops_grad_fim(n_params, b))
         rec = edge.finish_round_sync(est, up_bytes, down_bytes)

@@ -1,0 +1,12 @@
+"""Registry-backed federated algorithm strategies (see base.py for the
+protocol).  Importing this package registers the built-in strategies:
+fim_lbfgs, fedavg_sgd, fedavg_adam, fedprox, feddane, fedova,
+fedova_lbfgs."""
+from repro.fed.strategies.base import (FedStrategy, PhasePlan, RoundPlan,
+                                       get, names, register)
+from repro.fed.strategies import (  # noqa: F401  (registration side effects)
+    fedavg, feddane, fedova, fedprox, fim_lbfgs)
+
+__all__ = ["FedStrategy", "PhasePlan", "RoundPlan", "get", "names",
+           "register", "fedavg", "feddane", "fedova", "fedprox",
+           "fim_lbfgs"]

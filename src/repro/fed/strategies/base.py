@@ -1,0 +1,217 @@
+"""The ``FedStrategy`` protocol + registry.
+
+Every federated algorithm in this repo is a self-describing strategy
+object; ``FederatedRun`` (fed/server.py) is a *generic* round driver that
+never branches on the algorithm name.  A strategy declares:
+
+  * ``round_plan()`` — a :class:`RoundPlan`: per-phase upload/download
+    floats, element width, and ``aggregatable`` flags, plus client FLOPs.
+    The plan is the single source of truth consumed by CommLedger
+    metering, edge time/energy estimation, and scheduler planning — the
+    ledger records exactly what the plan predicts, by construction.
+  * ``client_step(data, rng, context)`` — one client's local work,
+    returning ``(payload, loss)``.  Payloads whose plan is ``summable``
+    may be summed in-network and buffered asynchronously (FedBuff-style),
+    so async edge support falls out of the declaration.
+  * ``aggregate(payloads, weights)`` — combine client payloads (the same
+    code path serves synchronous n_k-weighted and asynchronous
+    staleness-weighted aggregation).
+  * ``server_step(aggregate)`` — apply the aggregate to the server model.
+
+Multi-phase algorithms (FedDANE's gradient round before the inner solves)
+implement ``round_context``, which sees the whole cohort once and hands
+each client its per-client context; the extra phase's bytes live in the
+same plan.
+
+Registering a strategy makes it constructible by name through
+``FederatedRun(model_cfg, fed_cfg, train, test, algorithm="<name>")``::
+
+    @register("my_alg")
+    class MyStrategy(FedStrategy):
+        ...
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.fed import comm
+
+
+# ---------------------------------------------------------------------------
+# RoundPlan: the strategy's declared per-round resource footprint
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PhasePlan:
+    """One communication phase of a round (per *selected client*).
+
+    ``aggregatable`` carries the Theorem 3 semantics: summable payloads
+    (gradients, Fisher diagonals, per-class OVA components) admit
+    in-network tree aggregation — any node forwards O(log τ) payloads —
+    while distinct local models must each reach the root (O(k·d))."""
+    name: str
+    down_floats: float = 0.0          # broadcast floats (server -> client)
+    up_floats: float = 0.0            # upload floats (client -> server)
+    up_width: int = comm.BYTES_F32    # bytes per uploaded element
+    aggregatable: bool = True
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """Everything the generic driver needs to meter, estimate, and
+    schedule one round of a strategy — consumed once, never branched on
+    by algorithm name.
+
+    flops(n_k) predicts one client's round FLOPs given its local sample
+    count (partition sizes are run-constant, so the driver caches it).
+    ``summable`` gates buffered-async aggregation: a stale summable
+    payload is still a valid (staleness-discounted) additive update.
+    ``compressible`` lets the driver apply the generic int8
+    stochastic-rounding roundtrip (comm.quantize/dequantize) to payloads.
+    """
+    phases: tuple[PhasePlan, ...]
+    flops: Callable[[int], float]
+    summable: bool = False
+    compressible: bool = False
+    round_scalars: int = 0            # per-round scalar floats (Gram m²)
+    scalars_per_client: int = 0       # per-client scalar floats (OVA masks)
+
+    def upload_bytes(self) -> float:
+        """Per-client upload bytes per round (all phases)."""
+        return float(sum(p.up_floats * p.up_width for p in self.phases))
+
+    def downlink_bytes(self) -> float:
+        """Per-client broadcast bytes per round (all phases)."""
+        return float(sum(p.down_floats * comm.BYTES_F32 for p in self.phases))
+
+    def nonagg_upload_bytes(self) -> float:
+        """The non-aggregatable share of upload_bytes (0 = fully summable
+        in-network; FedDANE's model phase makes it a strict subset)."""
+        return float(sum(p.up_floats * p.up_width
+                         for p in self.phases if not p.aggregatable))
+
+
+# ---------------------------------------------------------------------------
+# The strategy protocol
+# ---------------------------------------------------------------------------
+class FedStrategy(abc.ABC):
+    """One federated algorithm as a self-describing object.
+
+    Owns the server-side model/optimizer state and the jitted client
+    functions; the driver owns sampling, metering, compression keys, the
+    edge runtime, and the client loop."""
+
+    name: str = ""  # filled in by ``register``
+
+    def __init__(self, model_cfg, fed_cfg, n_classes: int):
+        self.mcfg = model_cfg
+        self.fcfg = fed_cfg
+        self.n_classes = n_classes
+        self._n_params_cache: Optional[int] = None
+        self._plan_cache: Optional[RoundPlan] = None
+        self._build(jax.random.PRNGKey(fed_cfg.seed))
+
+    # -- construction ----------------------------------------------------
+    @abc.abstractmethod
+    def _build(self, key) -> None:
+        """Initialize model params, optimizer state, and jitted fns."""
+
+    # -- declaration -----------------------------------------------------
+    @abc.abstractmethod
+    def _make_plan(self) -> RoundPlan:
+        """Declare this strategy's per-round resource footprint."""
+
+    def round_plan(self) -> RoundPlan:
+        if self._plan_cache is None:
+            self._plan_cache = self._make_plan()
+        return self._plan_cache
+
+    def n_params(self) -> int:
+        """Float count of ONE broadcast model.  Default: the ``params``
+        pytree built by ``_build``; strategies with a different server
+        state (OVA's stacked components) override."""
+        if self._n_params_cache is None:
+            self._n_params_cache = comm.tree_n_floats(self.params)
+        return self._n_params_cache
+
+    # -- one round -------------------------------------------------------
+    def round_context(self, datas, rng):
+        """Optional cohort-wide pre-phase (FedDANE's gradient round).
+
+        datas: list of (xs, ys) for the selected cohort.  Returns a
+        per-client context sequence (or None), threaded into each
+        ``client_step``."""
+        return None
+
+    @abc.abstractmethod
+    def client_step(self, data, rng, context=None):
+        """One client's local update on data=(xs, ys).
+
+        Returns (payload, loss).  The payload is whatever
+        ``aggregate`` consumes — for summable plans it must be a pytree
+        that remains meaningful under weighted summation."""
+
+    def aggregate(self, payloads, weights):
+        """Combine client payloads under (n_k- or staleness-) weights.
+        Default: weighted mean over the stacked payload pytrees — right
+        for any single-pytree payload (deltas, models, gradients);
+        structured payloads (grad+Fisher pairs, masked OVA stacks)
+        override."""
+        return aggregation.weighted_mean(
+            jax.tree.map(lambda *t: jnp.stack(t), *payloads),
+            jnp.asarray(weights, jnp.float32))
+
+    @abc.abstractmethod
+    def server_step(self, aggregate) -> None:
+        """Apply an aggregate to the server model/optimizer state."""
+
+    def compress_payload(self, payload, key):
+        """int8 stochastic-rounding roundtrip (what the server receives).
+        Strategies whose payloads need structure-aware handling (e.g. a
+        nonnegative Fisher diagonal) override this."""
+        return comm.roundtrip(payload, key)
+
+    # -- evaluation ------------------------------------------------------
+    def evaluate(self, x, y) -> float:
+        """Test accuracy of the current server model.  Default: the
+        jitted ``self._eval`` over ``self.params`` (built in ``_build``);
+        strategies with other model state override."""
+        return float(self._eval(self.params, x, y))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[..., FedStrategy]] = {}
+
+
+def register(name: str, factory: Optional[Callable[..., FedStrategy]] = None):
+    """Register ``factory(model_cfg, fed_cfg, n_classes) -> FedStrategy``
+    under ``name``.  Usable as a decorator on a strategy class or called
+    directly with a factory (variants of one class register twice)."""
+
+    def _do(f):
+        try:
+            f.name = name
+        except (AttributeError, TypeError):
+            pass  # e.g. a functools.partial; the registry key still works
+        _REGISTRY[name] = f
+        return f
+
+    return _do if factory is None else _do(factory)
+
+
+def get(name: str) -> Callable[..., FedStrategy]:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown federated strategy {name!r}; known: {names()}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,25 @@
+"""FedProx [Li et al., MLSys 2020] — the registry's third-party drop-in
+proof: a sixth algorithm that lands as ~25 lines against the FedStrategy
+protocol with zero driver changes.
+
+Clients minimize F_k(w) + (μ/2)‖w − w_t‖² — the proximal term bounds
+local drift under non-IID partitions and device-level incomplete work.
+Everything else (delta payloads, FedAvg byte accounting, async
+eligibility) is inherited from the FedAvg scaffolding.
+"""
+from __future__ import annotations
+
+from repro.fed import client as fed_client
+from repro.fed.strategies.base import register
+from repro.fed.strategies.fedavg import LocalSolveStrategy
+
+
+@register("fedprox")
+class FedProxStrategy(LocalSolveStrategy):
+    def _build_solver(self) -> None:
+        self._prox = fed_client.make_fedprox_fn(self._loss)
+
+    def _local_solve(self, params, batches):
+        return self._prox(params, batches,
+                          lr=float(self.fcfg.learning_rate),
+                          mu=float(self.fcfg.prox_mu))

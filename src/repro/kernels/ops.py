@@ -7,7 +7,6 @@ semantics either way (tests sweep shapes/dtypes asserting allclose)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import fim_diag as _fim
 from repro.kernels import flash_attention as _fa

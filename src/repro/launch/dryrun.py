@@ -10,7 +10,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, INPUT_SHAPES, get
 from repro.launch import mesh as meshlib

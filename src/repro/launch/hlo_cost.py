@@ -188,7 +188,6 @@ def analyze(text: str) -> dict:
             op = ins["op"]
             if op in ("dot", "convolution"):
                 flops += m * _dot_flops(ins, st)
-            base = op.rstrip("-start").replace("-start", "")
             for ck in COLLECTIVES:
                 if op == ck or op == ck + "-start":
                     _, b = _shape_elems_bytes(ins["type"])

@@ -16,16 +16,14 @@ at LLM scale).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import baselines, fim, fim_lbfgs
+from repro.configs.base import ArchConfig
+from repro.core import baselines, fim_lbfgs
 from repro.models import model as zoo
-from repro.utils.pytree import tree_add, tree_scale
+from repro.utils.pytree import tree_scale
 
 
 def opt_config(cfg: ArchConfig, learning_rate: float = 0.05) -> fim_lbfgs.FimLbfgsConfig:

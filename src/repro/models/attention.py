@@ -8,7 +8,7 @@ the Pallas flash-attention kernel in ``repro/kernels/flash_attention.py``
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

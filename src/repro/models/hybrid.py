@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import mamba2, moe
 from repro.models.layers import constrain, dense_init, embed_init, mlp_apply, mlp_init, rms_norm
-from repro.models.transformer import DecodeCache, _chunked_ce, logits_fn
+from repro.models.transformer import _chunked_ce, logits_fn
 
 PERIOD = 8
 MM_PER_PERIOD = 3

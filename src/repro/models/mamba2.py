@@ -155,7 +155,6 @@ def mamba_decode(p, cfg, x, state: MambaState):
     B = x.shape[0]
     d_in, nh, N = _dims(cfg)
     hd = cfg.ssm_head_dim
-    K = cfg.ssm_conv
 
     zxbcdt = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])[:, 0]  # (B, z)
     z, xBC, dt = _split_proj(cfg, zxbcdt)

@@ -4,7 +4,6 @@ import importlib
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.models import hybrid, model, transformer
 

@@ -285,3 +285,42 @@ def test_simulator_with_edge_wrapper():
         params, opt, stats = estep(params, opt, cohort, jnp.ones(8))
     assert stats["wall_s"] > 0 and stats["sim_time_s"] > stats["wall_s"] / 2
     assert edge.summary()["rounds"] == 2
+
+
+def test_simulator_with_edge_true_client_ids():
+    """The wrapped round_step maps cohort slots to the TRUE selected fleet
+    entries: battery drain and device heterogeneity hit those clients, not
+    an arbitrary arange(k) prefix."""
+    import jax.numpy as jnp
+    from repro.configs.base import FedConfig
+    from repro.configs.paper_models import FMNIST_CNN, reduced
+    from repro.data.synthetic import make_classification
+    from repro.edge.runtime import EdgeRuntime
+    from repro.fed import simulator, strategies
+
+    mcfg = reduced(FMNIST_CNN)
+    fcfg = FedConfig(num_clients=12, seed=0)
+    s = strategies.get("fim_lbfgs")(mcfg, fcfg, 10)
+    step = simulator.from_strategy(s)
+    edge = EdgeRuntime(EdgeConfig(channel=SLOW_UPLINK,
+                                  device=DeviceConfig(flops_per_s_mean=2e9,
+                                                      battery_j=1e4)),
+                       num_clients=12)
+    estep = simulator.with_edge(step, edge, s.n_params())
+    train, _ = make_classification(mcfg, n_train=256, n_test=64, seed=0)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(train.x), size=(4, 32))
+    cohort = {"x": jnp.asarray(train.x[idx]), "y": jnp.asarray(train.y[idx])}
+    selected = np.asarray([9, 2, 11, 5])
+    full = edge.fleet.battery_j.copy()
+    _, _, stats = estep(s.params, s.opt_state, cohort, jnp.ones(4),
+                        clients=selected)
+    drained = np.flatnonzero(edge.fleet.battery_j < full)
+    assert sorted(drained) == sorted(selected)
+    assert stats["wall_s"] > 0
+    with pytest.raises(ValueError, match="cohort slots"):
+        estep(s.params, s.opt_state, cohort, jnp.ones(4),
+              clients=np.arange(3))
+    with pytest.raises(ValueError, match="client ids"):
+        estep(s.params, s.opt_state, cohort, jnp.ones(4),
+              clients=np.asarray([0, 1, 2, 99]))

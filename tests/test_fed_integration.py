@@ -1,7 +1,6 @@
 """End-to-end federated training (reduced scale): the paper's headline
 behavioural claims must hold directionally."""
 import numpy as np
-import pytest
 
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import FMNIST_CNN, reduced

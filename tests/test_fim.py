@@ -1,5 +1,4 @@
 """Diagonal-Fisher estimation (paper Eq. 9 + diagonalization)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

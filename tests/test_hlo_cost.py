@@ -54,7 +54,7 @@ def test_nested_scan_flops():
 
 
 def test_collectives_weighted_by_trip_count():
-    import subprocess, sys, os
+    import subprocess, sys
     # needs >1 device: run in a subprocess with 4 host devices
     code = r"""
 import os

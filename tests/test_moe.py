@@ -5,7 +5,6 @@ import numpy as np
 
 from repro.configs.dbrx_132b import smoke_config
 from repro.models import moe
-from repro.models.layers import mlp_init
 
 
 def _cfg(**kw):
