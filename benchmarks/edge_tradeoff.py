@@ -12,6 +12,14 @@ Part B — scheduling policies on a heterogeneous fleet (lognormal device
 speeds): deadline-aware straggler dropping and capacity-proportional
 selection vs the paper's uniform sampling.
 
+Part C — the (codec × strategy) grid: every payload codec in
+repro.fed.codecs (none / int8 / top-k / rand-k error-feedback
+sparsification) against the summable strategies.  Metered uplink bytes,
+simulated uplink wall-clock, and energy must all scale with the codec's
+wire size, and the ledger's actuals equal the plan's prediction under
+every codec — the grid checks both, mapping sparsity ratio to
+time/energy-to-accuracy.
+
     PYTHONPATH=src python -m benchmarks.run --only edge
 """
 from __future__ import annotations
@@ -135,7 +143,61 @@ def run(quick: bool = True):
                            s["dropped_total"]])
     emit(sched_rows, ["scheduler", "rounds_to_acc50", "sim_time_s",
                       "energy_J", "dropped"], "edge_schedulers")
-    return rows, sched_rows
+
+    # ---- Part C: codec x strategy grid (wire size -> time/energy) ------
+    codec_rows = run_codec_grid(mcfg, train, test, quick)
+    return rows, sched_rows, codec_rows
+
+
+def run_codec_grid(mcfg, train, test, quick: bool = True):
+    """Fixed-round sweep over (codec × strategy): per-round uplink MB,
+    simulated seconds and joules, each normalized against the uncoded
+    run — all three must track the codec's wire ratio.  Also asserts the
+    plan == ledger invariant under every codec."""
+    codec_specs = ["none", "int8", "topk:0.25", "topk:0.1", "randk:0.1"]
+    algs = ["fim_lbfgs", "fedavg_sgd"] + ([] if quick else ["fedprox"])
+    rounds = 3 if quick else 8
+    codec_rows = []
+    for alg in algs:
+        base = None
+        for spec in codec_specs:
+            edge = EdgeConfig(channel=ChannelConfig(topology="star", **UPLINK),
+                              device=HETERO_FLEET)
+            run_ = FederatedRun(mcfg, _fcfg(rounds, spec, edge),
+                                train, test, alg)
+            hist = run_.run(rounds=rounds, eval_every=rounds)
+            cohorts = sum(h["cohort"] for h in hist)
+            # the invariant the codecs PR exists to keep: metered actuals
+            # == plan prediction, under every codec
+            expect = run_.plan.upload_bytes() * cohorts
+            assert abs(run_.ledger.up_star_bytes - expect) < 1e-6 * max(expect, 1), \
+                (alg, spec, run_.ledger.up_star_bytes, expect)
+            s = run_.edge.summary()
+            led = run_.ledger.summary()
+            row = {
+                "up_MB_round": led["up_star_MB_per_round"],
+                "time_s": s["wall_clock_s"] / rounds,
+                "energy_j": s["energy_j"] / rounds,
+                "acc": hist[-1].get("accuracy", float("nan")),
+            }
+            if base is None:
+                base = row
+            codec_rows.append([
+                alg, spec,
+                round(run_.plan.upload_bytes() / 1e3, 1),
+                round(row["up_MB_round"], 3),
+                round(row["up_MB_round"] / base["up_MB_round"], 3),
+                round(row["time_s"], 1),
+                round(row["time_s"] / base["time_s"], 3),
+                round(row["energy_j"], 1),
+                round(row["energy_j"] / base["energy_j"], 3),
+                round(row["acc"], 3),
+            ])
+    emit(codec_rows, ["scheme", "codec", "plan_up_KB", "up_MB_per_round",
+                      "bytes_ratio", "sim_s_per_round", "time_ratio",
+                      "J_per_round", "energy_ratio", f"acc@r{rounds}"],
+         "edge_codec_grid")
+    return codec_rows
 
 
 if __name__ == "__main__":

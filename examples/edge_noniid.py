@@ -19,7 +19,7 @@ CHANNEL = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
 FLEET = DeviceConfig(flops_per_s_mean=1e9, flops_per_s_sigma=1.2)
 
 
-def run_one(mcfg, train, test, alg, edge, rounds=8):
+def run_one(mcfg, train, test, alg, edge, rounds=8, compress="none"):
     from repro.fed.server import FederatedRun
 
     # second-order knobs pinned to the stabilized point (see
@@ -29,6 +29,7 @@ def run_one(mcfg, train, test, alg, edge, rounds=8):
     fcfg = FedConfig(num_clients=16, participation=0.5, local_epochs=2,
                      batch_size=16, rounds=rounds, noniid_l=2,
                      learning_rate=0.05, seed=0, edge=edge,
+                     compress=compress,
                      max_step_norm=0.5, fim_damping=0.05, fim_ema=0.9)
     run = FederatedRun(mcfg, fcfg, train, test, alg)
     hist = run.run(rounds=rounds, eval_every=2, verbose=True)
@@ -56,6 +57,16 @@ def main():
         mcfg, train, test, "fedavg_sgd",
         EdgeConfig(channel=CHANNEL, device=FLEET, mode="async",
                    buffer_size=6, staleness_alpha=0.5))
+
+    print("-- fim_lbfgs + int8 codec (4x fewer uplink bytes -> time/energy) --")
+    results["int8"] = run_one(
+        mcfg, train, test, "fim_lbfgs",
+        EdgeConfig(channel=CHANNEL, device=FLEET), compress="int8")
+
+    print("-- fim_lbfgs + rand-k 10% with error feedback (10x fewer bytes) --")
+    results["randk"] = run_one(
+        mcfg, train, test, "fim_lbfgs",
+        EdgeConfig(channel=CHANNEL, device=FLEET), compress="randk:0.1")
 
     print("-- fedavg_sgd, deadline scheduler (drop predicted stragglers) --")
     results["deadline"] = run_one(

@@ -153,7 +153,9 @@ class FedConfig:
     fim_ema: float = 0.95
     rounds: int = 50             # T
     noniid_l: int = 0            # 0 = IID, else labels per client
-    compress: str = "none"       # "int8" = stochastic-rounding uploads (4x)
+    compress: str = "none"       # upload codec spec (repro.fed.codecs):
+                                 # "none" | "int8" | "topk[:ratio]" |
+                                 # "randk[:ratio]" — or any registered name
     fim_mode: str = "per_example"  # Eq. 9 diagonal: "per_example" (exact)
                                    # | "microbatch" (squared-grad proxy)
     prox_mu: float = 0.1         # FedProx proximal coefficient
@@ -164,10 +166,13 @@ class FedConfig:
     edge: Optional["EdgeConfig"] = None
 
     def __post_init__(self) -> None:
-        if self.compress not in ("none", "int8"):
-            raise ValueError(
-                f"FedConfig.compress must be 'none' or 'int8', "
-                f"got {self.compress!r}")
+        # late import: repro.fed.codecs pulls in jax-heavy modules and
+        # imports this module back — validate at construction, not import
+        from repro.fed import codecs
+        try:
+            codecs.make(self.compress)
+        except ValueError as e:
+            raise ValueError(f"FedConfig.compress: {e}") from None
         if self.fim_mode not in ("per_example", "microbatch"):
             raise ValueError(
                 f"FedConfig.fim_mode must be 'per_example' or 'microbatch', "

@@ -17,7 +17,7 @@ uploads exactly once — only the round boundaries move, which is why the
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import numpy as np
@@ -62,6 +62,9 @@ class AsyncAggregator:
         self.buffer_size = max(1, int(buffer_size))
         self.alpha = float(alpha)
         self.version = 0
+        # explicit counter: the shared clock may carry events other than
+        # client completions, so len(clock) over-counts pending uploads
+        self._in_flight = 0
 
     def submit(self, client: int, delay_s: float, n_samples: float,
                payload: Any) -> None:
@@ -69,10 +72,11 @@ class AsyncAggregator:
             delay_s, kind="client_done", client=int(client),
             payload=_InFlight(int(client), self.clock.now + float(delay_s),
                               self.version, float(n_samples), payload))
+        self._in_flight += 1
 
     @property
     def in_flight(self) -> int:
-        return len(self.clock)
+        return self._in_flight
 
     def pop_buffer(self, size: Optional[int] = None) -> tuple[list, np.ndarray]:
         """Pop the next ``size`` completions (default buffer_size), advance
@@ -87,6 +91,7 @@ class AsyncAggregator:
             if ev.kind != "client_done":
                 continue
             entries.append(ev.payload)
+        self._in_flight -= len(entries)
         if not entries:
             return [], np.zeros(0)
         stale = [self.version - e.version for e in entries]

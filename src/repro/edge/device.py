@@ -26,7 +26,8 @@ class DeviceConfig:
     flops_per_s_sigma: float = 0.5   # lognormal sigma (0 = homogeneous)
     joules_per_flop: float = 2e-10   # compute energy (~0.2 nJ/FLOP, mobile SoC)
     battery_j: float = float("inf")  # per-client energy budget
-    idle_power_w: float = 0.0        # drain while waiting (0 = ignore)
+    idle_power_w: float = 0.0        # drain while waiting at the sync-round
+                                     # barrier for stragglers (0 = ignore)
 
 
 def flops_grad_fim(n_params: int, n_examples: int) -> float:

@@ -127,8 +127,9 @@ class EdgeRuntime:
             nonagg = min(float(nonagg_bytes), float(up_bytes))
             agg = float(up_bytes) - nonagg
         if c.size == 0:
-            self.clock.advance(t_down)
-            return self._record(0.0 + t_down, 0.0, c)
+            # empty cohort: nothing is broadcast or transmitted — the
+            # clock must agree with the ledger's zero-byte round
+            return self._record(0.0, 0.0, c)
         if self.channel.cfg.topology == "tree":
             fl_t = est_sel.time_s - self.channel.uplink_time_s(up_bytes, c)
             t_round = float(np.max(fl_t)) + self.channel.comm_round_time_split(
@@ -139,8 +140,12 @@ class EdgeRuntime:
             t_round = max(self.clock.round_time(est_sel.time_s),
                           self.channel.comm_round_time_split(agg, nonagg, c))
         self.clock.advance(t_down + t_round)
-        e = float(est_sel.energy_j.sum())
-        self.fleet.spend(c, est_sel.energy_j)
+        # synchronous barrier: a client that finishes early sits idle until
+        # the round closes, draining idle_power_w the whole wait
+        idle_s = np.maximum(t_round - est_sel.time_s, 0.0)
+        spend_j = est_sel.energy_j + self.fleet.cfg.idle_power_w * idle_s
+        e = float(spend_j.sum())
+        self.fleet.spend(c, spend_j)
         return self._record(t_down + t_round, e, c)
 
     def dispatch_async(self, est_sel: ClientEstimate, n_samples, payloads,
@@ -149,8 +154,9 @@ class EdgeRuntime:
         spent at dispatch — the client does the work regardless of when
         its update lands)."""
         assert self.async_agg is not None, "EdgeConfig.mode != 'async'"
-        if (self.cfg.buffer_size == 0 and est_sel.clients.size
-                and not self._buffer_resolved):
+        if est_sel.clients.size == 0:
+            return  # empty cohort: nothing broadcast, nothing in flight
+        if self.cfg.buffer_size == 0 and not self._buffer_resolved:
             self.async_agg.buffer_size = max(1, (est_sel.clients.size + 1) // 2)
             self._buffer_resolved = True
         self.clock.advance(self.channel.downlink_time_s(down_bytes))

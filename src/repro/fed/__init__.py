@@ -1,1 +1,1 @@
-from repro.fed import client, server, simulator, strategies  # noqa: F401
+from repro.fed import client, codecs, server, simulator, strategies  # noqa: F401

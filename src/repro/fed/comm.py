@@ -13,9 +13,10 @@ theorem distinguishes:
     Theorem 3's O(d log τ) holds, and the exact analogue of the ICI
     tree/ring all-reduce the TPU mapping lowers to (DESIGN.md §3).
 
-Quantized uploads (beyond-paper feature, the related-work axis the paper
-cites as [27], [28]): per-tensor symmetric int8 with stochastic rounding —
-4× fewer upload bytes; the benchmark shows the accuracy cost.
+Compressed uploads live in :mod:`repro.fed.codecs` (the pluggable codec
+registry: int8 stochastic rounding, top-k / rand-k sparsification with
+error feedback); the ledger only meters the *wire bytes* a codec
+declares, via ``upload(..., wire_bytes=...)``.
 """
 from __future__ import annotations
 
@@ -23,7 +24,6 @@ import math
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 
 BYTES_F32 = 4
 BYTES_INT8 = 1
@@ -47,8 +47,13 @@ class CommLedger:
         self.down_bytes += n_floats * BYTES_F32 * n_clients
 
     def upload(self, n_floats: float, n_clients: int,
-               bytes_per_el: int = BYTES_F32, aggregatable: bool = True) -> None:
+               bytes_per_el: int = BYTES_F32, aggregatable: bool = True,
+               wire_bytes: float | None = None) -> None:
         """A per-client upload of ``n_floats`` elements.
+
+        ``wire_bytes`` overrides the linear ``n_floats * bytes_per_el``
+        payload size with a codec's declared wire size (sparsified uploads
+        carry indices, so bytes are not per-element uniform).
 
         aggregatable=True (gradients/FIM/summable params): in-network tree
         aggregation applies — each level halves the number of payloads, so
@@ -56,12 +61,16 @@ class CommLedger:
         aggregatable=False (FedAvg-style distinct local models the server
         must see individually): the tree carries every payload to the root,
         no gain over star."""
-        self.up_star_bytes += n_floats * bytes_per_el * n_clients
+        if n_clients <= 0:
+            return  # nobody transmitted: the tree depth floor must not bill
+        payload = (float(wire_bytes) if wire_bytes is not None
+                   else n_floats * bytes_per_el)
+        self.up_star_bytes += payload * n_clients
         if aggregatable:
             depth = max(1, math.ceil(math.log2(max(n_clients, 2))))
-            self.up_tree_bytes += n_floats * bytes_per_el * depth
+            self.up_tree_bytes += payload * depth
         else:
-            self.up_tree_bytes += n_floats * bytes_per_el * n_clients
+            self.up_tree_bytes += payload * n_clients
 
     def scalars(self, n: int) -> None:
         self.scalar_bytes += n * BYTES_F32
@@ -78,35 +87,3 @@ class CommLedger:
             "up_tree_MB_per_round": self.up_tree_bytes / r / 1e6,
             "scalar_KB_per_round": self.scalar_bytes / r / 1e3,
         }
-
-
-# ---------------------------------------------------------------------------
-# int8 stochastic-rounding quantization (per-tensor symmetric)
-# ---------------------------------------------------------------------------
-def quantize_tree(tree, key):
-    """-> (int8 tree, scales tree). Unbiased: stochastic rounding."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    q_leaves, scales = [], []
-    for leaf, k in zip(leaves, keys):
-        a = leaf.astype(jnp.float32)
-        scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-12) / 127.0
-        x = a / scale
-        lo = jnp.floor(x)
-        p = x - lo
-        rnd = lo + (jax.random.uniform(k, x.shape) < p).astype(jnp.float32)
-        q_leaves.append(jnp.clip(rnd, -127, 127).astype(jnp.int8))
-        scales.append(scale)
-    return (jax.tree_util.tree_unflatten(treedef, q_leaves),
-            jax.tree_util.tree_unflatten(treedef, scales))
-
-
-def dequantize_tree(q_tree, scales):
-    return jax.tree.map(
-        lambda q, s: q.astype(jnp.float32) * s, q_tree, scales)
-
-
-def roundtrip(tree, key):
-    """Quantize+dequantize (what the server receives)."""
-    q, s = quantize_tree(tree, key)
-    return dequantize_tree(q, s)

@@ -7,10 +7,15 @@ name.  Each registered strategy declares its per-round resource footprint
 owns everything algorithm-independent:
 
   * client sampling (optionally through the repro.edge scheduler, fed by
-    the plan's predicted bytes and FLOPs),
+    the plan's predicted *wire* bytes and FLOPs),
   * CommLedger metering, driven once per round from the plan — the
-    ledger's actuals equal the plan's prediction by construction,
-  * int8 upload compression (``comm.roundtrip``) for compressible plans,
+    ledger's actuals equal the plan's prediction by construction, under
+    every payload codec,
+  * upload compression through the run codec (``FedConfig.compress`` ->
+    repro.fed.codecs: int8 stochastic rounding, top-k / rand-k
+    sparsification) including the per-client error-feedback residuals
+    the sparsifiers need — keyed by true client id, so stale async
+    deltas keep their correction,
   * synchronous edge finishing and buffered-async aggregation — async is
     available to any strategy whose plan marks its payload ``summable``.
 
@@ -50,7 +55,6 @@ class FederatedRun:
         self.algorithm = algorithm
         self.rng = np.random.default_rng(fed_cfg.seed)
         self.ledger = comm.CommLedger()
-        self.compress = fed_cfg.compress
         self._qkey = jax.random.PRNGKey(fed_cfg.seed + 17)
         self.partition = noniid_partition(
             train.y, fed_cfg.num_clients, fed_cfg.noniid_l, train.n_classes,
@@ -58,7 +62,12 @@ class FederatedRun:
         )
         self.strategy = strategies.get(algorithm)(
             model_cfg, fed_cfg, train.n_classes)
+        # round_plan() validates the (strategy, codec) pair: a sparsifying
+        # codec on a non-summable payload raises instead of silently
+        # no-opping (the old `compressible` flag's failure mode)
         self.plan = self.strategy.round_plan()
+        self.codec = self.strategy.codec
+        self._ef_residual: dict[int, object] = {}  # client id -> EF state
         # ---- optional resource-constrained edge simulation (repro.edge)
         self.edge: Optional[EdgeRuntime] = None
         if fed_cfg.edge is not None:
@@ -107,13 +116,19 @@ class FederatedRun:
 
     def _meter_round(self, n_selected: int) -> None:
         """CommLedger metering, generically from the plan: the ledger's
-        actuals are the plan's predictions by construction."""
+        actuals are the plan's predictions by construction.  An empty
+        cohort still counts as a round but bills nothing — no uploads, no
+        Gram scalar exchange (the server step is skipped too)."""
+        if n_selected == 0:
+            self.ledger.end_round()
+            return
         for ph in self.plan.phases:
             if ph.down_floats:
                 self.ledger.broadcast(ph.down_floats, n_selected)
             if ph.up_floats:
-                self.ledger.upload(ph.up_floats, n_selected, ph.up_width,
-                                   aggregatable=ph.aggregatable)
+                self.ledger.upload(ph.up_floats, n_selected,
+                                   aggregatable=ph.aggregatable,
+                                   wire_bytes=ph.wire_up_bytes())
         n_scalars = (self.plan.round_scalars
                      + self.plan.scalars_per_client * n_selected)
         if n_scalars:
@@ -141,23 +156,33 @@ class FederatedRun:
     # ------------------------------------------------------------------
     def round(self) -> dict:
         """One generic federated round: meter from the plan, run the
-        optional cohort pre-phase, collect client payloads, then either
-        dispatch into the async buffer or aggregate synchronously."""
+        optional cohort pre-phase, collect client payloads (round-tripped
+        through the run codec, with per-client error feedback), then
+        either dispatch into the async buffer or aggregate synchronously.
+
+        An empty cohort (an exclusionary scheduler, e.g. energy_threshold,
+        can reject everyone) is recorded as ``cohort=0`` with no ``loss``
+        entry and the server step skipped — never an np.mean([]) NaN."""
         selected = self.sample_clients()
         self._meter_round(len(selected))
         datas = [self._client_data(i) for i in selected]
         context = self.strategy.round_context(datas, self.rng)
         payloads, weights, losses = [], [], []
-        for j, data in enumerate(datas):
+        for j, (cid, data) in enumerate(zip(selected, datas)):
             payload, loss = self.strategy.client_step(
                 data, self.rng, None if context is None else context[j])
-            if self.compress == "int8" and self.plan.compressible:
+            if not self.codec.identity:
                 self._qkey, sub = jax.random.split(self._qkey)
-                payload = self.strategy.compress_payload(payload, sub)
+                payload, res = self.strategy.compress_payload(
+                    payload, sub, self._ef_residual.get(cid))
+                if res is not None:
+                    self._ef_residual[cid] = res
             payloads.append(payload)
             weights.append(len(data[0]))
             losses.append(loss)
-        info = {"loss": float(np.mean(losses)) if losses else float("nan")}
+        info = {"cohort": len(selected)}
+        if losses:
+            info["loss"] = float(np.mean(losses))
         if self.edge is not None and self.edge.async_agg is not None:
             # buffered async: dispatch this cohort, aggregate whatever
             # buffer of (possibly stale) results arrives first
@@ -194,7 +219,8 @@ class FederatedRun:
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 info["accuracy"] = self.evaluate()
                 if verbose:
-                    print(f"round {t+1:4d} loss {info['loss']:.4f} "
+                    print(f"round {t+1:4d} "
+                          f"loss {info.get('loss', float('nan')):.4f} "
                           f"acc {info['accuracy']:.4f}")
                 if target_accuracy and info["accuracy"] >= target_accuracy:
                     info["round"] = t + 1

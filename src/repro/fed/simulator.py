@@ -25,17 +25,24 @@ from repro.core import aggregation, fim_lbfgs
 from repro.edge.device import flops_grad_fim
 from repro.edge.runtime import EdgeRuntime
 from repro.fed import client as fed_client
-from repro.fed import comm
+from repro.fed import codecs, comm
 
 
-def _build_round_step(client_fn: Callable, server_update: Callable):
-    """round_step(params, opt_state, cohort_batch, weights): vmap the
-    per-client fn over the stacked cohort, aggregate once, apply the pure
-    server update."""
+def _build_round_step(client_fn: Callable, server_update: Callable,
+                      compress_fn: Optional[Callable] = None):
+    """round_step(params, opt_state, cohort_batch, weights, key=None):
+    vmap the per-client fn over the stacked cohort, optionally round-trip
+    each client's (grad, Γ) payload through the codec (``key`` supplies
+    the per-client randomness; None skips compression), aggregate once,
+    apply the pure server update."""
 
-    def round_step(params, opt_state, cohort_batch, weights):
+    def round_step(params, opt_state, cohort_batch, weights, key=None):
         grads, diags, losses = jax.vmap(client_fn, in_axes=(None, 0))(
             params, cohort_batch)
+        if compress_fn is not None and key is not None:
+            keys = jax.random.split(key, losses.shape[0])
+            grads, diags = jax.vmap(compress_fn, in_axes=((0, 0), 0))(
+                (grads, diags), keys)
         grad = aggregation.weighted_mean(grads, weights)      # Σ_k (n_k/n) ∇F_k
         diag = aggregation.weighted_mean(diags, weights)      # Σ_k (n_k/n) Γ_k
         new_params, new_state, stats = server_update(
@@ -63,7 +70,14 @@ def make_round_step(loss_fn: Callable, per_example_loss: Callable | None,
 def from_strategy(strategy):
     """Derive the vmapped cohort ``round_step`` from a registered strategy
     (repro.fed.strategies): the strategy's own jitted client fn and pure
-    server update, so the sequential and mesh-parallel paths share code."""
+    server update, so the sequential and mesh-parallel paths share code.
+
+    The strategy's codec (``FedConfig.compress``) is threaded through as
+    well: pass a PRNG ``key`` to the returned step and every client's
+    payload is round-tripped through ``strategy.compress_payload`` inside
+    the same jitted round (stateless — the vmapped path keeps no per-
+    client error-feedback residuals, so sparsifiers here quantify the
+    raw, feedback-free compression error)."""
     try:
         client_fn = strategy.cohort_client_fn
         server_update = strategy.cohort_server_update
@@ -72,11 +86,25 @@ def from_strategy(strategy):
             f"strategy {getattr(strategy, 'name', strategy)!r} does not "
             "expose a vmappable cohort path (needs cohort_client_fn + "
             "cohort_server_update)") from e
-    return _build_round_step(client_fn, server_update)
+    compress_fn = None
+    codec = getattr(strategy, "codec", codecs.NONE)
+    if not codec.identity:
+        def compress_fn(payload, key):
+            out, _ = strategy.compress_payload(payload, key)
+            return out
+    jitted = _build_round_step(client_fn, server_update, compress_fn)
+
+    def round_step(params, opt_state, cohort_batch, weights, key=None):
+        return jitted(params, opt_state, cohort_batch, weights, key)
+
+    # advertise the wire format so with_edge bills the same codec the
+    # payloads actually round-trip through — one spec, not two
+    round_step.codec = codec
+    return round_step
 
 
 def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
-              compress: str = "none"):
+              compress=None):
     """Wrap a jitted ``round_step`` with the edge cost model.
 
     The vmapped cohort is the selected client set; after the device-side
@@ -88,15 +116,39 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
     The wrapped step takes an optional ``clients`` array — the TRUE
     selected client ids — so device heterogeneity and battery drain hit
     the right fleet entries; without it, cohort slot i falls back to
-    fleet entry i (mod fleet size)."""
-    per_el = comm.BYTES_INT8 if compress == "int8" else comm.BYTES_F32
-    up_bytes = 2.0 * n_params * per_el
+    fleet entry i (mod fleet size).
+
+    The uplink is costed at the codec's wire size, so edge time/energy
+    shrink exactly as the ledger bytes do.  The codec is derived from the
+    ``round_step`` itself (``from_strategy`` attaches the strategy's
+    codec); ``compress`` exists only to state it explicitly and must
+    match — billing a wire format the step does not round-trip raises,
+    so cost and accuracy cannot be paired apart by accident."""
+    step_codec = getattr(round_step, "codec", codecs.NONE)
+    codec = step_codec if compress is None else codecs.make(compress)
+    if codec.spec() != step_codec.spec():
+        raise ValueError(
+            f"round_step round-trips payloads through "
+            f"{step_codec.spec()!r} but billing was requested at "
+            f"{codec.spec()!r}; build the step with the same codec "
+            "(simulator.from_strategy attaches FedConfig.compress)")
+    up_bytes = codec.wire_bytes(2.0 * n_params)
     down_bytes = float(n_params * comm.BYTES_F32)
 
     def edge_round_step(params, opt_state, cohort_batch, weights,
-                        clients: Optional[np.ndarray] = None):
-        new_params, new_state, stats = round_step(
-            params, opt_state, cohort_batch, weights)
+                        clients: Optional[np.ndarray] = None, key=None):
+        if key is None and not codec.identity:
+            # billing compressed wire bytes for payloads that never
+            # round-trip would pair uncompressed accuracy with compressed
+            # cost — the silent divergence this layer exists to forbid
+            raise ValueError(
+                f"codec {codec.spec()!r} bills compressed uplink bytes: "
+                "pass key=... so the payloads actually round-trip through "
+                "it (or build the step with compress='none')")
+        # only forward key when given: a bare 4-arg round_step stays valid
+        args = (params, opt_state, cohort_batch, weights)
+        new_params, new_state, stats = (
+            round_step(*args) if key is None else round_step(*args, key))
         k, b = cohort_batch["y"].shape[:2]
         if clients is None:
             cohort = np.arange(k) % edge.num_clients

@@ -5,10 +5,11 @@ object; ``FederatedRun`` (fed/server.py) is a *generic* round driver that
 never branches on the algorithm name.  A strategy declares:
 
   * ``round_plan()`` — a :class:`RoundPlan`: per-phase upload/download
-    floats, element width, and ``aggregatable`` flags, plus client FLOPs.
-    The plan is the single source of truth consumed by CommLedger
-    metering, edge time/energy estimation, and scheduler planning — the
-    ledger records exactly what the plan predicts, by construction.
+    floats, the upload's wire codec (repro.fed.codecs), and
+    ``aggregatable`` flags, plus client FLOPs.  The plan is the single
+    source of truth consumed by CommLedger metering, edge time/energy
+    estimation, and scheduler planning — the ledger records exactly what
+    the plan predicts, by construction, under every codec.
   * ``client_step(data, rng, context)`` — one client's local work,
     returning ``(payload, loss)``.  Payloads whose plan is ``summable``
     may be summed in-network and buffered asynchronously (FedBuff-style),
@@ -40,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
-from repro.fed import comm
+from repro.fed import codecs, comm
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +51,13 @@ from repro.fed import comm
 class PhasePlan:
     """One communication phase of a round (per *selected client*).
 
+    ``codec`` declares the upload's wire format (repro.fed.codecs): its
+    ``wire_bytes(up_floats)`` is the single number CommLedger metering,
+    edge uplink time/energy, and scheduler estimates all consume — the
+    built-in strategies attach the run codec (``FedConfig.compress``) to
+    every payload-carrying phase, so compressed wire sizes reach all
+    three by construction.
+
     ``aggregatable`` carries the Theorem 3 semantics: summable payloads
     (gradients, Fisher diagonals, per-class OVA components) admit
     in-network tree aggregation — any node forwards O(log τ) payloads —
@@ -57,8 +65,12 @@ class PhasePlan:
     name: str
     down_floats: float = 0.0          # broadcast floats (server -> client)
     up_floats: float = 0.0            # upload floats (client -> server)
-    up_width: int = comm.BYTES_F32    # bytes per uploaded element
+    codec: codecs.PayloadCodec = codecs.NONE   # upload wire format
     aggregatable: bool = True
+
+    def wire_up_bytes(self) -> float:
+        """Per-client upload bytes of this phase under its codec."""
+        return self.codec.wire_bytes(self.up_floats)
 
 
 @dataclass(frozen=True)
@@ -70,20 +82,19 @@ class RoundPlan:
     flops(n_k) predicts one client's round FLOPs given its local sample
     count (partition sizes are run-constant, so the driver caches it).
     ``summable`` gates buffered-async aggregation: a stale summable
-    payload is still a valid (staleness-discounted) additive update.
-    ``compressible`` lets the driver apply the generic int8
-    stochastic-rounding roundtrip (comm.quantize/dequantize) to payloads.
+    payload is still a valid (staleness-discounted) additive update —
+    and it also gates *sparsifying* codecs (top-k / rand-k), which zero
+    coordinates and are only meaningful for such additive payloads.
     """
     phases: tuple[PhasePlan, ...]
     flops: Callable[[int], float]
     summable: bool = False
-    compressible: bool = False
     round_scalars: int = 0            # per-round scalar floats (Gram m²)
     scalars_per_client: int = 0       # per-client scalar floats (OVA masks)
 
     def upload_bytes(self) -> float:
-        """Per-client upload bytes per round (all phases)."""
-        return float(sum(p.up_floats * p.up_width for p in self.phases))
+        """Per-client upload wire bytes per round (all phases)."""
+        return float(sum(p.wire_up_bytes() for p in self.phases))
 
     def downlink_bytes(self) -> float:
         """Per-client broadcast bytes per round (all phases)."""
@@ -92,7 +103,7 @@ class RoundPlan:
     def nonagg_upload_bytes(self) -> float:
         """The non-aggregatable share of upload_bytes (0 = fully summable
         in-network; FedDANE's model phase makes it a strict subset)."""
-        return float(sum(p.up_floats * p.up_width
+        return float(sum(p.wire_up_bytes()
                          for p in self.phases if not p.aggregatable))
 
 
@@ -112,6 +123,9 @@ class FedStrategy(abc.ABC):
         self.mcfg = model_cfg
         self.fcfg = fed_cfg
         self.n_classes = n_classes
+        # the run's payload codec (FedConfig.compress); _make_plan attaches
+        # it to payload-carrying phases so wire bytes flow everywhere
+        self.codec = codecs.make(fed_cfg.compress)
         self._n_params_cache: Optional[int] = None
         self._plan_cache: Optional[RoundPlan] = None
         self._build(jax.random.PRNGKey(fed_cfg.seed))
@@ -128,7 +142,15 @@ class FedStrategy(abc.ABC):
 
     def round_plan(self) -> RoundPlan:
         if self._plan_cache is None:
-            self._plan_cache = self._make_plan()
+            plan = self._make_plan()
+            if self.codec.sparsifying and not plan.summable:
+                raise ValueError(
+                    f"codec {self.codec.spec()!r} sparsifies payload "
+                    "coordinates, which is only meaningful for additive "
+                    f"(summable) payloads; strategy {self.name!r} uploads "
+                    "distinct models/components (summable=False) — use "
+                    "compress='none' or 'int8'")
+            self._plan_cache = plan
         return self._plan_cache
 
     def n_params(self) -> int:
@@ -170,11 +192,14 @@ class FedStrategy(abc.ABC):
     def server_step(self, aggregate) -> None:
         """Apply an aggregate to the server model/optimizer state."""
 
-    def compress_payload(self, payload, key):
-        """int8 stochastic-rounding roundtrip (what the server receives).
-        Strategies whose payloads need structure-aware handling (e.g. a
-        nonnegative Fisher diagonal) override this."""
-        return comm.roundtrip(payload, key)
+    def compress_payload(self, payload, key, residual=None):
+        """Round-trip the payload through the run's codec (what the
+        server receives).  Returns ``(payload, new_residual)`` — the
+        driver owns the per-client error-feedback residual and threads it
+        back in next round.  Strategies whose payloads need structure-
+        aware handling (e.g. a nonnegative Fisher diagonal, an OVA
+        presence mask that must not be quantized) override this."""
+        return self.codec.roundtrip(payload, key, residual)
 
     # -- evaluation ------------------------------------------------------
     def evaluate(self, x, y) -> float:

@@ -43,9 +43,9 @@ class LocalSolveStrategy(FedStrategy):
             # the paper's accounting: k distinct local models reach the
             # server — O(k·d), no in-network aggregation gain (Thm 3)
             phases=(PhasePlan("local_model", down_floats=d, up_floats=d,
-                              aggregatable=False),),
+                              codec=self.codec, aggregatable=False),),
             flops=lambda n: edge_device.flops_local_sgd(self.n_params(), n, e),
-            summable=True,  # delta payloads sum — async-eligible
+            summable=True,  # delta payloads sum — async- and sparsify-eligible
         )
 
     def client_step(self, data, rng, context=None):

@@ -29,6 +29,9 @@ class FedDaneStrategy(FedStrategy):
             self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode)
         self._dane = fed_client.make_feddane_fn(self._loss)
         self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, self.mcfg, x, y))
+        # the context phase's gradient uploads route through the codec too
+        # (stateless — no error-feedback accumulator for the pre-phase)
+        self._ckey = jax.random.PRNGKey(self.fcfg.seed + 29)
 
     def _make_plan(self) -> RoundPlan:
         d = self.n_params()
@@ -36,9 +39,9 @@ class FedDaneStrategy(FedStrategy):
         return RoundPlan(
             phases=(
                 PhasePlan("gradient", down_floats=d, up_floats=d,
-                          aggregatable=True),
+                          codec=self.codec, aggregatable=True),
                 PhasePlan("inner_solve", down_floats=d, up_floats=d,
-                          aggregatable=False),
+                          codec=self.codec, aggregatable=False),
             ),
             flops=lambda n: (edge_device.flops_grad_fim(self.n_params(), n)
                              + edge_device.flops_local_sgd(self.n_params(), n, e)),
@@ -50,16 +53,20 @@ class FedDaneStrategy(FedStrategy):
         each client's context is (global_grad, its own ∇F_k(w_t))."""
         if not datas:
             return []
-        grads, weights = [], []
+        local_grads, sent_grads, weights = [], [], []
         for xs, ys in datas:
             batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
             g, _, _ = self._grad_fim(self.params, batch)
-            grads.append(g)
+            local_grads.append(g)  # the client keeps its exact gradient
+            if not self.codec.identity:
+                self._ckey, sub = jax.random.split(self._ckey)
+                g, _ = self.codec.roundtrip(g, sub)
+            sent_grads.append(g)   # the server only sees the wire version
             weights.append(len(xs))
         w = jnp.asarray(weights, jnp.float32)
         global_grad = aggregation.weighted_mean(
-            jax.tree.map(lambda *t: jnp.stack(t), *grads), w)
-        return [(global_grad, g) for g in grads]
+            jax.tree.map(lambda *t: jnp.stack(t), *sent_grads), w)
+        return list(zip([global_grad] * len(datas), local_grads))
 
     def client_step(self, data, rng, context=None):
         xs, ys = data

@@ -75,7 +75,8 @@ class FedOvaStrategy(FedStrategy):
             # class count it is an upper bound on the data-dependent
             # truth
             phases=(PhasePlan("ova_components", down_floats=float(d * n),
-                              up_floats=float(d * c), aggregatable=True),),
+                              up_floats=float(d * c), codec=self.codec,
+                              aggregatable=True),),
             flops=lambda nk: edge_device.flops_local_sgd(
                 self.n_params(), nk, e) * self._classes_per_client(),
             summable=False,  # the grouped mean needs per-client masks
@@ -114,6 +115,13 @@ class FedOvaStrategy(FedStrategy):
             return comp_new, loss
         return self._local_sgd(comp_c, batches,
                                lr=float(self.fcfg.learning_rate))
+
+    def compress_payload(self, payload, key, residual=None):
+        # codec the component stack only: the class-presence mask is
+        # metered as scalars and must survive the wire exactly
+        comp, mask = payload
+        comp, residual = self.codec.roundtrip(comp, key, residual)
+        return (comp, mask), residual
 
     def aggregate(self, payloads, weights):
         comps = [p[0] for p in payloads]

@@ -5,7 +5,9 @@ protocol with zero driver changes.
 Clients minimize F_k(w) + (μ/2)‖w − w_t‖² — the proximal term bounds
 local drift under non-IID partitions and device-level incomplete work.
 Everything else (delta payloads, FedAvg byte accounting, async
-eligibility) is inherited from the FedAvg scaffolding.
+eligibility, and — because deltas are summable — the full codec matrix
+including top-k / rand-k error-feedback sparsification) is inherited
+from the FedAvg scaffolding.
 """
 from __future__ import annotations
 

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 from repro.core import aggregation, fim_lbfgs
 from repro.edge import device as edge_device
 from repro.fed import client as fed_client
-from repro.fed import comm
 from repro.fed.strategies.base import FedStrategy, PhasePlan, RoundPlan, register
 from repro.models import cnn
 
@@ -34,14 +33,11 @@ class FimLbfgsStrategy(FedStrategy):
 
     def _make_plan(self) -> RoundPlan:
         d = self.n_params()
-        per_el = (comm.BYTES_INT8 if self.fcfg.compress == "int8"
-                  else comm.BYTES_F32)
         return RoundPlan(
             phases=(PhasePlan("grad_fim", down_floats=d, up_floats=2.0 * d,
-                              up_width=per_el, aggregatable=True),),
+                              codec=self.codec, aggregatable=True),),
             flops=lambda n: edge_device.flops_grad_fim(self.n_params(), n),
             summable=True,
-            compressible=True,
             round_scalars=(2 * self.fcfg.lbfgs_m + 1) ** 2,  # Gram exchange
         )
 
@@ -54,12 +50,11 @@ class FimLbfgsStrategy(FedStrategy):
         g, f, loss = self._grad_fim(self.params, batch)
         return (g, f), float(loss)
 
-    def compress_payload(self, payload, key):
-        g, f = payload
-        k1, k2 = jax.random.split(key)
+    def compress_payload(self, payload, key, residual=None):
+        out, residual = self.codec.roundtrip(payload, key, residual)
+        g, f = out
         # the Fisher diagonal must stay nonnegative through the roundtrip
-        return (comm.roundtrip(g, k1),
-                jax.tree.map(jnp.abs, comm.roundtrip(f, k2)))
+        return (g, jax.tree.map(jnp.abs, f)), residual
 
     def aggregate(self, payloads, weights):
         w = jnp.asarray(weights, jnp.float32)

@@ -1,0 +1,370 @@
+"""repro.fed.codecs: registry/spec parsing, wire-byte accounting,
+round-trip unbiasedness (int8 stochastic rounding per round; top-k /
+rand-k error feedback in the long run), the plan == ledger invariant
+parametrized over (strategy × codec), the int8-never-a-no-op regression
+for all seven registered strategies, and the edge/scheduler coupling —
+compressed wire sizes must shrink uplink time and energy too."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.fed import codecs, strategies
+from repro.fed.server import FederatedRun
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hermetic fallback: seeded-random sampling
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
+
+MCFG = reduced(FMNIST_CNN)
+ALL_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox", "feddane",
+            "fedova", "fedova_lbfgs"]
+SUMMABLE_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox"]
+SPARSIFYING = ["topk:0.1", "randk:0.1"]
+
+
+def _data(n_train=300, n_test=100, noise=0.5, seed=0):
+    return make_classification(MCFG, n_train=n_train, n_test=n_test,
+                               seed=seed, noise=noise)
+
+
+def _fcfg(**kw):
+    base = dict(num_clients=8, participation=1.0, local_epochs=1,
+                batch_size=32, rounds=2, noniid_l=2, learning_rate=0.05,
+                seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_roundtrip_and_specs():
+    assert {"none", "int8", "topk", "randk"} <= set(codecs.names())
+    assert codecs.make("none").identity
+    assert codecs.make("int8").spec() == "int8"
+    tk = codecs.make("topk:0.05")
+    assert isinstance(tk, codecs.TopKCodec) and tk.ratio == 0.05
+    assert codecs.make(tk) is tk  # instances pass through
+    assert codecs.make(tk.spec()).ratio == tk.ratio
+    rk = codecs.make("randk")  # default ratio
+    assert rk.ratio == codecs.RandKCodec.default_ratio
+
+
+def test_unknown_codec_and_bad_params_raise():
+    with pytest.raises(ValueError, match="unknown payload codec"):
+        codecs.make("int4")
+    with pytest.raises(ValueError, match="ratio"):
+        codecs.make("topk:0")
+    with pytest.raises(ValueError, match="ratio"):
+        codecs.make("randk:1.5")
+    with pytest.raises(ValueError, match="bad codec spec"):
+        codecs.make("int8:3")  # int8 takes no parameter
+    with pytest.raises(ValueError, match="compress"):
+        FedConfig(compress="gzip")
+    with pytest.raises(ValueError, match="compress"):
+        FedConfig(compress="topk:-1")
+
+
+def test_third_party_codec_registers_and_runs():
+    """A codec registered from outside the package drives a run end to
+    end (the README example's shape: lossless-in-sim fp16 halving)."""
+    @codecs.register("_test_fp16")
+    class Fp16Codec(codecs.PayloadCodec):
+        def wire_bytes(self, n_floats):
+            return 2.0 * n_floats
+
+        def roundtrip(self, tree, key, residual=None):
+            return jax.tree.map(
+                lambda x: x.astype(jnp.float16).astype(jnp.float32),
+                tree), None
+
+    try:
+        train, test = _data()
+        run = FederatedRun(MCFG, _fcfg(compress="_test_fp16"), train, test,
+                           "fedavg_sgd")
+        hist = run.run(rounds=2, eval_every=2)
+        assert np.isfinite(hist[-1]["loss"])
+        d = run.strategy.n_params()
+        assert run.plan.upload_bytes() == 2.0 * d
+    finally:
+        codecs._REGISTRY.pop("_test_fp16", None)
+
+
+# ---------------------------------------------------------------- wire bytes
+def test_wire_bytes_per_codec():
+    n = 10_000
+    assert codecs.make("none").wire_bytes(n) == 4 * n
+    assert codecs.make("int8").wire_bytes(n) == n
+    # top-k ships value + explicit index (8 B/kept); rand-k shares the
+    # index seed with the server, so only values cross the wire (4 B/kept)
+    assert codecs.make("topk:0.1").wire_bytes(n) == math.ceil(0.1 * n) * 8
+    assert codecs.make("randk:0.1").wire_bytes(n) == math.ceil(0.1 * n) * 4
+    # a 50%-sparse top-k costs the same as uncompressed float32
+    assert codecs.make("topk:0.5").wire_bytes(n) == 4 * n
+
+
+# ------------------------------------------------------------- round-trips
+def test_topk_keeps_largest_and_returns_residual():
+    tk = codecs.make("topk:0.25")
+    x = {"w": jnp.asarray([1.0, -8.0, 0.5, 3.0, -0.1, 0.2, 6.0, -2.0])}
+    sent, res = tk.roundtrip(x, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(sent["w"]),
+                               [0.0, -8.0, 0, 0, 0, 0, 6.0, 0])
+    np.testing.assert_allclose(np.asarray(sent["w"]) + np.asarray(res["w"]),
+                               np.asarray(x["w"]))
+
+
+def test_sparsifier_kept_count_equals_billed_wire_elements():
+    """The metered wire size and the semantic round-trip must agree:
+    selection is global over the flattened payload, so a multi-leaf tree
+    transmits exactly the ceil(ratio * n_floats) elements wire_bytes
+    bills — per-leaf ceil()s/floors would overshoot on small tensors."""
+    tree = {"w": jnp.arange(1.0, 16.0),          # 15 floats
+            "b": jnp.arange(1.0, 9.0),           # 8 floats
+            "deep": {"k": jnp.ones((3, 4))}}     # 12 floats
+    n = 15 + 8 + 12
+    for spec, per_el in (("topk:0.1", 8), ("randk:0.1", 4)):
+        codec = codecs.make(spec)
+        sent, _ = codec.roundtrip(tree, jax.random.PRNGKey(0))
+        kept = sum(int((np.asarray(leaf) != 0).sum())
+                   for leaf in jax.tree.leaves(sent))
+        assert kept == math.ceil(0.1 * n), spec
+        assert codec.wire_bytes(n) == kept * per_el, spec
+
+
+def test_randk_keeps_exactly_k_and_returns_residual():
+    rk = codecs.make("randk:0.25")
+    x = {"w": jnp.arange(1.0, 17.0)}
+    sent, res = rk.roundtrip(x, jax.random.PRNGKey(3))
+    assert int((np.asarray(sent["w"]) != 0).sum()) == 4
+    np.testing.assert_allclose(np.asarray(sent["w"]) + np.asarray(res["w"]),
+                               np.asarray(x["w"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_int8_roundtrip_unbiased_property(seed):
+    """Property: stochastic rounding is unbiased per round —
+    E_key[dequant(quant(x))] = x within the Monte-Carlo tolerance."""
+    rng = np.random.default_rng(seed)
+    x = {"a": jnp.asarray(rng.normal(0, 2.0, 64).astype(np.float32))}
+    n_keys = 300
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_keys)
+    int8 = codecs.make("int8")
+    acc = np.zeros(64)
+    for k in keys:
+        acc += np.asarray(int8.roundtrip(x, k)[0]["a"])
+    scale = float(jnp.max(jnp.abs(x["a"]))) / 127.0
+    # per-draw rounding noise has std <= scale/2, so the 300-key mean sits
+    # within ~scale/35 of x; 0.2*scale is ~7 sigma yet still 1/5 of a step
+    np.testing.assert_allclose(acc / n_keys, np.asarray(x["a"]),
+                               atol=0.2 * scale)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sparsifier_error_feedback_unbiased_in_the_long_run(seed):
+    """Property: with error feedback, the *cumulative* transmitted signal
+    tracks the cumulative true signal — the telescoping identity
+    sum_t(sent_t) == T*x - residual_T holds exactly, so the per-round
+    bias is the (bounded) residual over T and vanishes."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(rng.normal(0, 1.0, 40).astype(np.float32))
+    rounds = 30
+    for spec in SPARSIFYING:
+        codec = codecs.make(spec)
+        keys = jax.random.split(jax.random.PRNGKey(seed + 1), rounds)
+        sent_sum = np.zeros(40)
+        res = None
+        for k in keys:
+            sent, res = codec.roundtrip({"a": jnp.asarray(x)}, k, res)
+            sent_sum += np.asarray(sent["a"])
+        # sum of sends == rounds*x - final residual, exactly (telescoping)
+        np.testing.assert_allclose(
+            sent_sum, rounds * x - np.asarray(res["a"]),
+            rtol=1e-4, atol=1e-4, err_msg=spec)
+        # the long-run average tracks x: for top-k every coordinate is
+        # flushed once its accumulated error tops the selection threshold
+        # (deterministic); for rand-k selection is uniform, so judge the
+        # relative L2 error (a coord missing all 30 draws has p=0.9^30)
+        err = np.linalg.norm(sent_sum / rounds - x) / np.linalg.norm(x)
+        assert err < 0.5, (spec, err)
+        if spec.startswith("topk"):
+            assert float(np.abs(np.asarray(res["a"])).max()) <= \
+                float(np.abs(x).max()) * (1.0 / codec.ratio + 1.0)
+
+
+# ------------------------------------------- the int8 no-op regression (bug)
+@pytest.mark.parametrize("alg", ALL_ALGS)
+def test_int8_shrinks_ledger_for_every_strategy(alg):
+    """The bug this PR fixes: compress='int8' silently uploaded float32
+    for six of the seven strategies.  Now every registered strategy's
+    metered up-bytes must shrink 4x — never a silent no-op."""
+    train, test = _data()
+    up = {}
+    for spec in ("none", "int8"):
+        run = FederatedRun(MCFG, _fcfg(compress=spec), train, test, alg)
+        run.run(rounds=1, eval_every=1)
+        up[spec] = (run.ledger.up_star_bytes, run.ledger.up_tree_bytes)
+    assert up["int8"][0] == pytest.approx(up["none"][0] / 4), alg
+    assert up["int8"][1] == pytest.approx(up["none"][1] / 4), alg
+
+
+# ------------------------------------------- plan == ledger × strategy × codec
+CODEC_MATRIX = ([(a, s) for a in ALL_ALGS for s in ("none", "int8")]
+                + [(a, s) for a in SUMMABLE_ALGS for s in SPARSIFYING])
+
+
+@pytest.mark.parametrize("alg,spec", CODEC_MATRIX)
+def test_roundplan_matches_ledger_under_every_codec(alg, spec):
+    train, test = _data()
+    run = FederatedRun(MCFG, _fcfg(compress=spec), train, test, alg)
+    run.run(rounds=2, eval_every=2)
+    k = sum(len(run.partition[i]) > 0 for i in range(run.fcfg.num_clients))
+    plan = run.plan
+    assert run.ledger.up_star_bytes == pytest.approx(
+        plan.upload_bytes() * k * 2), (alg, spec)
+    expect_tree = 0.0
+    for ph in plan.phases:
+        wire = ph.codec.wire_bytes(ph.up_floats)
+        depth = max(1, math.ceil(math.log2(max(k, 2))))
+        expect_tree += wire * (depth if ph.aggregatable else k)
+    assert run.ledger.up_tree_bytes == pytest.approx(expect_tree * 2), (alg, spec)
+
+
+@pytest.mark.parametrize("alg", ["feddane", "fedova"])
+def test_sparsifying_codec_rejected_for_nonsummable(alg):
+    """Top-k/rand-k zero coordinates — only additive (summable) payloads
+    survive that; distinct-model uploads must raise, not corrupt."""
+    train, test = _data()
+    with pytest.raises(ValueError, match="sparsif"):
+        FederatedRun(MCFG, _fcfg(compress="topk:0.1"), train, test, alg)
+
+
+def test_error_feedback_state_is_per_client():
+    train, test = _data()
+    run = FederatedRun(MCFG, _fcfg(compress="topk:0.2"), train, test,
+                       "fedavg_sgd")
+    run.run(rounds=2, eval_every=2)
+    active = {i for i in range(run.fcfg.num_clients)
+              if len(run.partition[i]) > 0}
+    assert set(run._ef_residual) == active
+    # residuals share the payload pytree structure
+    one = next(iter(run._ef_residual.values()))
+    assert (jax.tree_util.tree_structure(one)
+            == jax.tree_util.tree_structure(run.strategy.params))
+
+
+def test_sparsified_fim_lbfgs_still_learns():
+    train, test = _data(n_train=800, n_test=200, noise=0.35)
+    run = FederatedRun(MCFG, _fcfg(compress="topk:0.25", rounds=6), train,
+                       test, "fim_lbfgs")
+    hist = run.run(rounds=6, eval_every=6)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["accuracy"] > 0.3, hist[-1]
+
+
+# ----------------------------------------------------- edge/plan coupling
+def test_codec_wire_bytes_shrink_edge_time_and_energy():
+    """The whole point: the edge runtime must cost the *compressed* wire
+    size — uplink seconds and joules scale with the codec, keeping plan,
+    ledger, and channel in agreement."""
+    from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+
+    def run_with(spec):
+        edge = EdgeConfig(
+            channel=ChannelConfig(bandwidth_hz=2e5, fading="none",
+                                  server_rate_bps=1.5e6),
+            device=DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=0.0))
+        train, test = _data()
+        run = FederatedRun(MCFG, _fcfg(compress=spec, edge=edge), train,
+                           test, "fim_lbfgs")
+        run.run(rounds=2, eval_every=2)
+        return run
+
+    base, quant = run_with("none"), run_with("int8")
+    assert quant.plan.upload_bytes() == base.plan.upload_bytes() / 4
+    assert quant.edge.summary()["wall_clock_s"] < base.edge.summary()["wall_clock_s"]
+    assert quant.edge.summary()["energy_j"] < base.edge.summary()["energy_j"]
+
+
+def test_scheduler_estimates_see_compressed_bytes():
+    from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+
+    results = {}
+    for spec in ("none", "randk:0.05"):
+        edge = EdgeConfig(
+            channel=ChannelConfig(bandwidth_hz=2e5, fading="none"),
+            device=DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=0.0))
+        train, test = _data()
+        run = FederatedRun(MCFG, _fcfg(compress=spec, edge=edge), train,
+                           test, "fedavg_sgd")
+        run.sample_clients()
+        results[spec] = run._edge_est.time_s.copy()
+    assert (results["randk:0.05"] < results["none"]).all()
+
+
+def test_simulator_from_strategy_threads_codec():
+    """The vmapped cohort path compresses payloads inside the jitted
+    round when given a key, at the strategy's own codec."""
+    from repro.fed import simulator
+
+    train, _ = _data()
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(train.x), size=(4, 32))
+    cohort = {"x": jnp.asarray(train.x[idx]), "y": jnp.asarray(train.y[idx])}
+
+    s = strategies.get("fim_lbfgs")(MCFG, _fcfg(compress="topk:0.1"), 10)
+    step = simulator.from_strategy(s)
+    p1, _, stats = step(s.params, s.opt_state, cohort, jnp.ones(4),
+                        key=jax.random.PRNGKey(0))
+    assert np.isfinite(float(stats["loss"]))
+    # without a key the same step runs uncompressed (backward compatible)
+    p2, _, stats2 = step(s.params, s.opt_state, cohort, jnp.ones(4))
+    assert np.isfinite(float(stats2["loss"]))
+    d1 = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                                      p1, p2))
+    assert max(d1) > 0  # compression actually changed the update
+
+
+def test_simulator_with_edge_costs_codec_wire_bytes():
+    from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+    from repro.edge.runtime import EdgeRuntime
+    from repro.fed import simulator
+
+    train, _ = _data()
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(train.x), size=(4, 32))
+    cohort = {"x": jnp.asarray(train.x[idx]), "y": jnp.asarray(train.y[idx])}
+    walls = {}
+    for spec in ("none", "int8"):
+        s = strategies.get("fim_lbfgs")(MCFG, _fcfg(compress=spec), 10)
+        step = simulator.from_strategy(s)
+        assert step.codec.spec() == spec  # the step advertises its codec
+        edge = EdgeRuntime(EdgeConfig(
+            channel=ChannelConfig(bandwidth_hz=2e5, fading="none",
+                                  snr_db_std=0.0),
+            device=DeviceConfig(flops_per_s_mean=2e9,
+                                flops_per_s_sigma=0.0)), 8)
+        # no compress= here: with_edge derives the wire format from the
+        # step itself, so billed bytes can't desync from the round-trip
+        estep = simulator.with_edge(step, edge, s.n_params())
+        _, _, stats = estep(s.params, s.opt_state, cohort, jnp.ones(4),
+                            key=jax.random.PRNGKey(1))
+        walls[spec] = stats["wall_s"]
+    assert walls["int8"] < walls["none"]
+    # billed-compressed + actually-uncompressed must be impossible: a
+    # compressing step demands the key that makes the round-trip real
+    with pytest.raises(ValueError, match="bills compressed"):
+        estep(s.params, s.opt_state, cohort, jnp.ones(4))
+    # and an explicit wire format that differs from what the step
+    # round-trips is rejected at wrap time (s is the int8 strategy here)
+    with pytest.raises(ValueError, match="round-trips"):
+        simulator.with_edge(step, edge, s.n_params(), compress="topk:0.1")

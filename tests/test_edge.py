@@ -163,6 +163,23 @@ def test_event_clock_orders_and_advances():
         clk.advance(-1.0)
 
 
+def test_in_flight_counts_only_pending_client_uploads():
+    """Regression: in_flight used to report len(clock) — ANY pending
+    event inflated it.  The explicit counter tracks submissions only."""
+    clk = EventClock()
+    agg = AsyncAggregator(clk, buffer_size=2)
+    agg.submit(0, 1.0, 10, "a")
+    agg.submit(1, 2.0, 10, "b")
+    agg.submit(2, 3.0, 10, "c")
+    clk.push(0.5, kind="battery_report")  # unrelated event on the shared clock
+    assert len(clk) == 4
+    assert agg.in_flight == 3
+    entries, _ = agg.pop_buffer()
+    assert len(entries) == 2 and agg.in_flight == 1
+    entries, _ = agg.pop_buffer()
+    assert len(entries) == 1 and agg.in_flight == 0
+
+
 def test_async_aggregator_buffers_in_arrival_order():
     clk = EventClock()
     agg = AsyncAggregator(clk, buffer_size=2, alpha=0.5)
@@ -254,6 +271,99 @@ def test_edge_history_reports_time_and_energy():
     run = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), rounds=2)
     s = run.edge.summary()
     assert s["wall_clock_s"] > 0 and s["energy_j"] > 0 and s["rounds"] == 2
+
+
+def test_async_in_flight_matches_runtime_summary():
+    """EdgeRuntime.summary()['in_flight'] must equal the set of busy
+    clients the driver tracks — not the raw pending-event count."""
+    run = _fed_run(EdgeConfig(channel=SLOW_UPLINK, device=HETERO,
+                              mode="async", buffer_size=3), rounds=4)
+    s = run.edge.summary()
+    assert s["in_flight"] == len(run.edge.busy)
+    dispatched = sum(h["cohort"] for h in run.last_history)
+    aggregated = sum(h.get("aggregated", 0) for h in run.last_history)
+    assert s["in_flight"] == dispatched - aggregated
+
+
+def test_idle_power_drains_barrier_waiters():
+    """Satellite bugfix: idle_power_w was declared but never drained.
+    Fast clients idle at the sync barrier until the slowest finishes —
+    their batteries lose idle_power_w * wait on top of the round work."""
+    from repro.edge.runtime import EdgeRuntime
+
+    def one_round(idle_w):
+        cfg = EdgeConfig(channel=ChannelConfig(fading="none", snr_db_std=0.0),
+                         device=DeviceConfig(flops_per_s_mean=1e9,
+                                             flops_per_s_sigma=1.0,
+                                             battery_j=1e4,
+                                             idle_power_w=idle_w))
+        rt = EdgeRuntime(cfg, 8, seed=0)
+        est = rt.estimate(np.arange(8), up_bytes=1e5, flops=1e9)
+        rec = rt.finish_round_sync(est, up_bytes=1e5, down_bytes=1e5)
+        return rt, est, rec
+
+    rt0, est0, rec0 = one_round(0.0)
+    rt1, est1, rec1 = one_round(0.5)
+    np.testing.assert_allclose(est0.time_s, est1.time_s)  # same fleet draw
+    assert rec1["energy_j"] > rec0["energy_j"]
+    drained0 = 1e4 - rt0.fleet.battery_j
+    drained1 = 1e4 - rt1.fleet.battery_j
+    # the barrier is the slowest client's finish + the comm drain: every
+    # client's extra drain is idle_power_w * its wait for the barrier
+    t_round = rec1["wall_s"] - rt1.channel.downlink_time_s(1e5)
+    np.testing.assert_allclose(drained1 - drained0,
+                               0.5 * np.maximum(t_round - est1.time_s, 0.0),
+                               rtol=1e-9)
+    # the fastest client idles longest, so it drains the most extra
+    extra = drained1 - drained0
+    assert extra[np.argmin(est1.time_s)] == pytest.approx(extra.max())
+
+
+def test_empty_cohort_round_is_recorded_cleanly():
+    """Satellite bugfix: a scheduler that excludes everyone (e.g. all
+    batteries under the energy floor) must yield a cohort=0 round with no
+    server step and no NaN/np.mean([]) — RuntimeWarnings are errors in
+    this suite, so any regression trips immediately."""
+    import jax
+
+    edge = EdgeConfig(channel=SLOW_UPLINK,
+                      device=DeviceConfig(flops_per_s_mean=2e9,
+                                          battery_j=0.5),
+                      scheduler="energy_threshold", battery_floor_j=1.0)
+    run = _fed_run(edge, alg="fedavg_sgd", rounds=2)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                          run.strategy.params)
+    hist = run.last_history
+    assert [h["cohort"] for h in hist] == [0, 0]
+    assert all("loss" not in h for h in hist)
+    assert "accuracy" in hist[-1]  # evaluation still runs
+    # nobody transmitted: rounds tick but no bytes are billed (the tree
+    # depth floor of max(1, log2 k) must not charge a phantom payload)
+    assert run.ledger.rounds == 2
+    for f in ("down_bytes", "up_star_bytes", "up_tree_bytes",
+              "scalar_bytes"):
+        assert getattr(run.ledger, f) == 0.0, f
+    info = run.round()  # one more: the server model must not move
+    assert info["cohort"] == 0
+    for a, b in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(run.strategy.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    # and the edge clock agrees with the ledger: no broadcast happened
+    assert run.edge.summary()["wall_clock_s"] == 0.0
+
+
+def test_empty_cohort_async_does_not_advance_clock():
+    """The async dispatch path must match the sync fix: an all-excluded
+    cohort broadcasts nothing, so the clock stays put."""
+    edge = EdgeConfig(channel=SLOW_UPLINK,
+                      device=DeviceConfig(flops_per_s_mean=2e9,
+                                          battery_j=0.5),
+                      scheduler="energy_threshold", battery_floor_j=1.0,
+                      mode="async", buffer_size=2)
+    run = _fed_run(edge, alg="fedavg_sgd", rounds=2)
+    assert [h["cohort"] for h in run.last_history] == [0, 0]
+    assert run.edge.summary()["wall_clock_s"] == 0.0
+    assert run.ledger.up_star_bytes == 0.0
 
 
 def test_simulator_with_edge_wrapper():

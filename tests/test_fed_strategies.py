@@ -55,6 +55,7 @@ def test_third_party_strategy_drops_in():
     import jax
     import jax.numpy as jnp
     from repro.fed import client as fed_client
+    from repro.fed import codecs
     from repro.fed.strategies import (FedStrategy, PhasePlan, RoundPlan,
                                       register)
     from repro.models import cnn
@@ -73,8 +74,10 @@ def test_third_party_strategy_drops_in():
         def _make_plan(self):
             d = self.n_params()
             return RoundPlan(
+                # sign payloads are 1 byte/element on the wire: declare the
+                # int8 wire format through the codec registry
                 phases=(PhasePlan("sign_grad", down_floats=d, up_floats=d,
-                                  up_width=comm.BYTES_INT8),),
+                                  codec=codecs.make("int8")),),
                 flops=lambda n: float(6 * d * n), summable=True)
 
         def client_step(self, data, rng, context=None):
@@ -110,13 +113,14 @@ def _expected_ledger(plan, k, rounds):
     """Independently re-derive CommLedger fields from a RoundPlan."""
     down = up_star = up_tree = scalars = 0.0
     for ph in plan.phases:
+        wire = ph.codec.wire_bytes(ph.up_floats)
         down += ph.down_floats * comm.BYTES_F32 * k
-        up_star += ph.up_floats * ph.up_width * k
+        up_star += wire * k
         if ph.aggregatable:
             depth = max(1, math.ceil(math.log2(max(k, 2))))
-            up_tree += ph.up_floats * ph.up_width * depth
+            up_tree += wire * depth
         else:
-            up_tree += ph.up_floats * ph.up_width * k
+            up_tree += wire * k
     scalars = (plan.round_scalars + plan.scalars_per_client * k) * comm.BYTES_F32
     return {f: v * rounds for f, v in zip(
         ("down_bytes", "up_star_bytes", "up_tree_bytes", "scalar_bytes"),

@@ -79,16 +79,17 @@ def test_add_class_smooth_adaptation():
 def test_int8_quantization_unbiased():
     """Stochastic rounding: E[dequant(quant(x))] = x; error bounded by scale."""
     import jax
-    from repro.fed import comm
+    from repro.fed import codecs
+    int8 = codecs.make("int8")
     x = {"w": jnp.linspace(-3.0, 3.0, 101)}
     keys = jax.random.split(jax.random.PRNGKey(0), 200)
     acc = np.zeros(101)
     for k in keys:
-        acc += np.asarray(comm.roundtrip(x, k)["w"])
+        acc += np.asarray(int8.roundtrip(x, k)[0]["w"])
     mean = acc / len(keys)
     scale = 3.0 / 127
     np.testing.assert_allclose(mean, np.asarray(x["w"]), atol=scale * 0.5)
-    one = comm.roundtrip(x, keys[0])["w"]
+    one = int8.roundtrip(x, keys[0])[0]["w"]
     assert float(jnp.max(jnp.abs(one - x["w"]))) <= scale + 1e-6
 
 
