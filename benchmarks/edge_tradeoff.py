@@ -8,7 +8,7 @@ communication claims become *time*: under in-network (tree) aggregation
 Algorithm 1 pays O(d log τ) per round and needs fewer rounds, while
 FedAvg's k distinct models keep the root link at O(k·d) per round.
 
-Part B — scheduling policies on a heterogeneous fleet (lognormal device
+Part B — allocation policies on a heterogeneous fleet (lognormal device
 speeds): deadline-aware straggler dropping and capacity-proportional
 selection vs the paper's uniform sampling.
 
@@ -19,6 +19,13 @@ simulated uplink wall-clock, and energy must all scale with the codec's
 wire size, and the ledger's actuals equal the plan's prediction under
 every codec — the grid checks both, mapping sparsity ratio to
 time/energy-to-accuracy.
+
+Part D — per-client bandwidth allocation (repro.edge.allocation): the
+``bandwidth_opt`` policy (minimize the sync-round barrier max_k t_k by
+bisection on the arXiv:1910.13067 capacity form) vs the uniform equal
+split at EQUAL total bandwidth.  Bytes are identical by construction —
+allocation changes who/when/how-fast, never what is counted — so the
+whole win shows up as wall time.
 
     PYTHONPATH=src python -m benchmarks.run --only edge
 """
@@ -146,7 +153,10 @@ def run(quick: bool = True):
 
     # ---- Part C: codec x strategy grid (wire size -> time/energy) ------
     codec_rows = run_codec_grid(mcfg, train, test, quick)
-    return rows, sched_rows, codec_rows
+
+    # ---- Part D: bandwidth allocation at equal total budget ------------
+    alloc_rows = run_bandwidth_sweep(mcfg, train, test, quick)
+    return rows, sched_rows, codec_rows, alloc_rows
 
 
 def run_codec_grid(mcfg, train, test, quick: bool = True):
@@ -198,6 +208,56 @@ def run_codec_grid(mcfg, train, test, quick: bool = True):
                       "J_per_round", "energy_ratio", f"acc@r{rounds}"],
          "edge_codec_grid")
     return codec_rows
+
+
+def run_bandwidth_sweep(mcfg, train, test, quick: bool = True):
+    """Part D: ``bandwidth_opt`` vs the uniform equal split at equal
+    total bandwidth (the shared round budget, identical seeds -> the
+    same cohorts and channel draws).  The convex reallocation shifts
+    subchannel width toward slow-compute/deep-fade clients, so the
+    sync-round barrier max_k t_k — and therefore wall time for the same
+    round count — shrinks, while CommLedger bytes are unchanged to the
+    byte: allocation changes who/when/how-fast, never what is counted."""
+    rounds = 4 if quick else 10
+    algs = ["fim_lbfgs"] + ([] if quick else ["fedavg_sgd"])
+    # fat server slice: the barrier is the per-client air time the
+    # allocator can actually reshape, not the shared drain
+    channel = ChannelConfig(topology="star", **{**UPLINK,
+                                                "server_rate_bps": 50e6})
+    alloc_rows = []
+    for alg in algs:
+        walls, led = {}, {}
+        for policy in ("uniform", "bandwidth_opt"):
+            edge = EdgeConfig(channel=channel,
+                              device=DeviceConfig(flops_per_s_mean=5e8,
+                                                  flops_per_s_sigma=1.5),
+                              scheduler=policy)
+            fcfg = FedConfig(num_clients=20, participation=0.5,
+                             local_epochs=1, batch_size=10_000,
+                             rounds=rounds, noniid_l=3, learning_rate=0.05,
+                             seed=0, edge=edge)
+            run_ = FederatedRun(mcfg, fcfg, train, test, alg)
+            run_.run(rounds=rounds, eval_every=rounds)
+            s = run_.edge.summary()
+            walls[policy] = s["wall_clock_s"]
+            led[policy] = run_.ledger.up_star_bytes
+            budget = run_.edge.decisions[-1].budget_hz
+            alloc_rows.append([alg, policy, round(budget / 1e6, 2),
+                               round(s["wall_clock_s"] / rounds, 2),
+                               round(s["energy_j"] / rounds, 1),
+                               round(run_.ledger.up_star_bytes / 1e6, 3)])
+        # the acceptance invariant: same bytes, strictly less wall time
+        assert led["bandwidth_opt"] == led["uniform"], \
+            (alg, led)
+        assert walls["bandwidth_opt"] < walls["uniform"], (alg, walls)
+        print(f"[edge D] {alg}: bandwidth_opt {walls['bandwidth_opt']:.1f}s "
+              f"vs uniform {walls['uniform']:.1f}s for {rounds} rounds at "
+              f"equal budget -> barrier x"
+              f"{walls['uniform'] / walls['bandwidth_opt']:.2f} smaller, "
+              "bytes identical")
+    emit(alloc_rows, ["scheme", "policy", "budget_MHz", "sim_s_per_round",
+                      "J_per_round", "uplink_MB_total"], "edge_bandwidth_opt")
+    return alloc_rows
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ fleet has stragglers.
 
     PYTHONPATH=src python examples/edge_noniid.py
 """
+import dataclasses
+
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import FMNIST_CNN, reduced
 from repro.data.synthetic import make_classification
@@ -68,11 +70,32 @@ def main():
         mcfg, train, test, "fim_lbfgs",
         EdgeConfig(channel=CHANNEL, device=FLEET), compress="randk:0.1")
 
-    print("-- fedavg_sgd, deadline scheduler (drop predicted stragglers) --")
+    print("-- fedavg_sgd, deadline policy (drop predicted stragglers; "
+          "survivors inherit their budget share) --")
     results["deadline"] = run_one(
         mcfg, train, test, "fedavg_sgd",
         EdgeConfig(channel=CHANNEL, device=FLEET, scheduler="deadline",
                    deadline_s=5.0, min_clients=3))
+
+    # bandwidth_opt minimizes the STAR barrier max_k(t_comp,k + t_up,k);
+    # under tree aggregation the wall is depth x the median hop, a
+    # different objective (see ROADMAP: tree-aware allocation is open)
+    star = dataclasses.replace(CHANNEL, topology="star")
+    print("-- fim_lbfgs, star, bandwidth_opt vs uniform (same bytes, the "
+          "sync barrier reshaped over the shared budget) --")
+    results["star_uni"] = run_one(
+        mcfg, train, test, "fim_lbfgs",
+        EdgeConfig(channel=star, device=FLEET, scheduler="uniform"))
+    results["bw_opt"] = run_one(
+        mcfg, train, test, "fim_lbfgs",
+        EdgeConfig(channel=star, device=FLEET, scheduler="bandwidth_opt"))
+
+    print("-- fedavg_sgd, adaptive_codec (per-client top-k ratio from the "
+          "sampled channel rate) --")
+    results["adaptive"] = run_one(
+        mcfg, train, test, "fedavg_sgd",
+        EdgeConfig(channel=CHANNEL, device=FLEET, scheduler="adaptive_codec",
+                   adaptive_ratio=0.25, adaptive_ratio_floor=0.05))
 
     print("summary (best_acc, sim_seconds):")
     for name, (best, s) in results.items():

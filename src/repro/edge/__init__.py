@@ -5,40 +5,59 @@ devices behind expensive uplinks.  This subsystem simulates that layer
 under the existing federated loop, converting the byte counts the
 ``CommLedger`` already tracks into wall-clock time and energy:
 
-  * channel.py   — Shannon-capacity uplink/downlink (bandwidth, per-round
-                   SNR draws, optional Rayleigh fading), star and tree
-                   topologies (the two readings of Theorem 3);
-  * device.py    — heterogeneous compute fleet (FLOPs/s, J/FLOP, battery);
-  * scheduler.py — pluggable client selection: uniform (the paper's),
-                   deadline-aware straggler dropping, energy-threshold
-                   data exclusion (arXiv:2104.05509), capacity-proportional
-                   (arXiv:1910.13067);
-  * async_agg.py — buffered asynchronous aggregation with
-                   staleness-discounted weights (FedBuff-style);
-  * events.py    — event-driven simulation clock;
-  * runtime.py   — EdgeConfig + EdgeRuntime gluing the above under
-                   ``FederatedRun`` and the vmapped simulator cohort path.
+  * channel.py    — Shannon-capacity uplink/downlink (per-client
+                    bandwidth, per-round SNR draws, optional Rayleigh
+                    fading), star and tree topologies (the two readings
+                    of Theorem 3);
+  * device.py     — heterogeneous compute fleet (FLOPs/s, J/FLOP, battery);
+  * allocation.py — per-client resource allocation: an AllocationPolicy
+                    registry whose decide(RoundState) -> RoundDecision
+                    apportions a shared round bandwidth budget (and,
+                    optionally, per-client upload codecs) over the
+                    selected cohort — uniform (the paper's), deadline
+                    straggler dropping, energy-threshold exclusion
+                    (arXiv:2104.05509), capacity-proportional selection
+                    and the bandwidth_opt barrier-minimizing convex
+                    allocation (arXiv:1910.13067), channel-adaptive
+                    top-k codecs;
+  * scheduler.py  — back-compat shim for the PR-1 Scheduler names;
+  * async_agg.py  — buffered asynchronous aggregation with
+                    staleness-discounted weights (FedBuff-style);
+  * events.py     — event-driven simulation clock;
+  * runtime.py    — EdgeConfig + EdgeRuntime gluing the above under
+                    ``FederatedRun`` and the vmapped simulator cohort path.
 
-Bytes are scheduler-independent (the ledger is ground truth); only the
-times and energies the runtime derives from them depend on the channel,
-fleet, and scheduling policy.
+Bandwidth allocation never changes WHAT is transmitted (the ledger is
+ground truth); per-client codecs change bytes only through their
+``wire_bytes``, and the ledger still equals the plan per client.
 """
+from repro.edge.allocation import (Allocation, AllocationPolicy,
+                                   AdaptiveCodecPolicy, BandwidthOptPolicy,
+                                   CapacityProportionalPolicy, ClientEstimate,
+                                   DeadlinePolicy, EnergyThresholdPolicy,
+                                   RoundDecision, RoundState, UniformPolicy,
+                                   make_policy)
 from repro.edge.async_agg import AsyncAggregator, staleness_weights
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet, flops_grad_fim, flops_local_sgd
 from repro.edge.events import Event, EventClock
 from repro.edge.runtime import EdgeConfig, EdgeRuntime
-from repro.edge.scheduler import (CapacityProportionalScheduler, ClientEstimate,
+from repro.edge.scheduler import (CapacityProportionalScheduler,
                                   DeadlineScheduler, EnergyThresholdScheduler,
                                   UniformScheduler, make_scheduler)
 
 __all__ = [
+    "Allocation", "AllocationPolicy", "RoundState", "RoundDecision",
+    "UniformPolicy", "DeadlinePolicy", "EnergyThresholdPolicy",
+    "CapacityProportionalPolicy", "BandwidthOptPolicy", "AdaptiveCodecPolicy",
+    "make_policy",
     "AsyncAggregator", "staleness_weights",
     "Channel", "ChannelConfig",
     "DeviceConfig", "DeviceFleet", "flops_grad_fim", "flops_local_sgd",
     "Event", "EventClock",
     "EdgeConfig", "EdgeRuntime",
-    "ClientEstimate", "UniformScheduler", "DeadlineScheduler",
-    "EnergyThresholdScheduler", "CapacityProportionalScheduler",
-    "make_scheduler",
+    "ClientEstimate",
+    # legacy aliases (see edge/scheduler.py)
+    "UniformScheduler", "DeadlineScheduler", "EnergyThresholdScheduler",
+    "CapacityProportionalScheduler", "make_scheduler",
 ]

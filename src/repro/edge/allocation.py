@@ -1,0 +1,482 @@
+"""Per-client resource allocation for the edge runtime.
+
+The paper's resource-constrained FEEL formulation is about *how much* of
+the wireless budget each client gets, not just *who* transmits.  An
+``AllocationPolicy`` therefore returns a :class:`RoundDecision` — per
+selected client an :class:`Allocation` (uplink ``bandwidth_hz`` drawn
+from a shared round budget, an optional per-client upload codec, and a
+deadline) plus the ids it deliberately excluded, with reasons.  Client
+*selection* (the old ``Scheduler.select`` API) is the degenerate case
+where every selected client gets an equal split of the budget.
+
+Policies (register your own with :func:`register`):
+  * uniform               — sample k uniformly (the paper's protocol),
+                            equal bandwidth split.
+  * deadline              — uniform proposal, then exclude clients whose
+                            predicted finish exceeds the round deadline
+                            (straggler dropping; the quantile-barrier
+                            view of synchronous FEEL); equal split.
+  * energy_threshold      — exclude clients whose battery is below a
+                            floor or whose round energy exceeds a budget,
+                            à la the threshold-based exclusion design of
+                            arXiv:2104.05509 (exclusion == an allocation
+                            of zero); equal split.
+  * capacity_proportional — sample with probability ∝ predicted capacity
+                            1/t_k, the resource-allocation reading of
+                            arXiv:1910.13067; equal split.
+  * bandwidth_opt         — uniform cohort, then minimize the sync-round
+                            barrier max_k t_k subject to Σ_k W_k ≤ budget
+                            by bisection on the arXiv:1910.13067 capacity
+                            form t_k = t_comp,k + bits / (W_k·log2(1+γ_k)).
+  * adaptive_codec        — uniform cohort + equal split, but each
+                            client's top-k upload ratio is scheduled from
+                            its sampled channel rate (fast links send
+                            denser payloads); summable plans only.
+
+Every policy sees the same :class:`RoundState`: the eligible ids with a
+per-client :class:`ClientEstimate` under a *nominal* equal split, the
+compute-only times, this round's spectral efficiencies, the shared
+bandwidth budget, and the upload wire format.  Bandwidth-only policies
+never change WHAT is transmitted — CommLedger bytes are allocation-
+independent; per-client codecs change bytes only through the codec's
+``wire_bytes``, and the ledger still equals the plan per client.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Estimates (moved from the retired edge/scheduler.py surface)
+# ---------------------------------------------------------------------------
+@dataclass
+class ClientEstimate:
+    """Predicted per-client round cost under current channel/fleet state."""
+    clients: np.ndarray      # (n,) eligible ids
+    time_s: np.ndarray       # (n,) predicted compute + uplink time
+    energy_j: np.ndarray     # (n,) predicted compute + uplink energy
+    battery_j: np.ndarray    # (n,) remaining budget
+
+    def for_ids(self, ids) -> "ClientEstimate":
+        pos = {int(c): i for i, c in enumerate(self.clients)}
+        sel = []
+        for i in ids:
+            if int(i) not in pos:
+                raise ValueError(
+                    f"client id {int(i)} is not in this estimate's eligible "
+                    f"set of {len(self.clients)} clients "
+                    f"({np.sort(self.clients).tolist()})")
+            sel.append(pos[int(i)])
+        sel = np.asarray(sel, dtype=int)
+        return ClientEstimate(self.clients[sel], self.time_s[sel],
+                              self.energy_j[sel], self.battery_j[sel])
+
+
+# ---------------------------------------------------------------------------
+# The decision types
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Allocation:
+    """One selected client's share of the round: an uplink subchannel
+    width drawn from the shared budget, an optional per-client upload
+    codec (None = the plan's / run's codec), and the finish deadline the
+    policy holds it to (informational; inf = none)."""
+    bandwidth_hz: float
+    codec: Any = None              # Optional[repro.fed.codecs.PayloadCodec]
+    deadline_s: float = float("inf")
+
+
+@dataclass
+class RoundState:
+    """Everything a policy may consult to decide one round.
+
+    ``est`` covers the *eligible* (alive) clients, predicted under the
+    nominal equal split ``budget_hz / k`` — so a pure selection policy
+    reads it exactly as the old scheduler did.  ``wire_fn(codec|None)``
+    answers "what does one client's upload cost on the wire under this
+    codec override?" as ``(aggregatable_bytes, nonagg_bytes)``; policies
+    never recompute plan bytes themselves."""
+    k: int                          # target cohort size
+    est: ClientEstimate             # eligible clients, nominal-split costs
+    t_comp_s: np.ndarray            # (n,) compute-only share of est.time_s
+    spectral_eff: np.ndarray        # (n,) bits/s/Hz under this round's fade
+    budget_hz: float                # shared round uplink bandwidth budget
+    rng: np.random.Generator
+    codec: Any = None               # the run's base upload codec
+    summable: bool = True           # plan.summable (gates codec overrides)
+    wire_fn: Optional[Callable[[Any], tuple[float, float]]] = None
+    payload_mult: Optional[np.ndarray] = None  # (n,) payloads per client
+                                               # (duplicate cohort slots on
+                                               # one device; None = 1 each)
+
+    def mult(self) -> np.ndarray:
+        if self.payload_mult is None:
+            return np.ones(len(self.est.clients))
+        return np.asarray(self.payload_mult, dtype=float)
+
+    def wire_bytes(self, codec=None) -> tuple[float, float]:
+        """Per-client (aggregatable, non-aggregatable) upload wire bytes
+        under ``codec`` (None = the base codec)."""
+        if self.wire_fn is not None:
+            return self.wire_fn(codec)
+        return (0.0, 0.0)
+
+    def up_bits(self, codec=None) -> float:
+        agg, nonagg = self.wire_bytes(codec)
+        return 8.0 * (agg + nonagg)
+
+
+@dataclass
+class RoundDecision:
+    """A policy's answer: who transmits with how much of the budget (and
+    in which wire format), and who was excluded, with the reason."""
+    allocations: dict[int, Allocation] = field(default_factory=dict)
+    excluded: dict[int, str] = field(default_factory=dict)
+    budget_hz: float = float("inf")
+
+    @property
+    def selected(self) -> list[int]:
+        return list(self.allocations)
+
+    @property
+    def heterogeneous_codecs(self) -> bool:
+        return any(a.codec is not None for a in self.allocations.values())
+
+    def bandwidth(self, ids=None) -> np.ndarray:
+        ids = self.selected if ids is None else ids
+        return np.asarray([self.allocations[int(i)].bandwidth_hz
+                           for i in ids], dtype=float)
+
+    def codec_for(self, cid: int):
+        """The client's upload codec override (None = plan/run codec)."""
+        return self.allocations[int(cid)].codec
+
+    def total_bandwidth_hz(self) -> float:
+        return float(sum(a.bandwidth_hz for a in self.allocations.values()))
+
+    def validate(self) -> "RoundDecision":
+        """The allocation invariants every policy must satisfy: each
+        transmitting client holds a strictly positive subchannel, and the
+        round never hands out more than the shared budget."""
+        for cid, a in self.allocations.items():
+            if not a.bandwidth_hz > 0.0:
+                raise ValueError(
+                    f"allocation for client {cid} has non-positive bandwidth "
+                    f"{a.bandwidth_hz!r}; exclude the client instead")
+        total = self.total_bandwidth_hz()
+        if total > self.budget_hz * (1.0 + 1e-9):
+            raise ValueError(
+                f"allocated bandwidth {total:.6g} Hz exceeds the round "
+                f"budget {self.budget_hz:.6g} Hz")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# The policy protocol
+# ---------------------------------------------------------------------------
+class AllocationPolicy:
+    """decide(RoundState) -> RoundDecision.
+
+    ``decide`` composes two overridable stages: ``select`` (who, and who
+    is excluded why) and ``allocate`` (how much of the budget each
+    selected client gets).  The default ``allocate`` is the uniform
+    split, so a pure selection policy only implements ``select`` — the
+    four ``make_scheduler``-era policies are exactly that."""
+
+    name = "base"
+    needs_summable = False   # True: the policy emits per-client sparsifying
+                             # codecs, meaningful only for additive payloads
+
+    def decide(self, state: RoundState) -> RoundDecision:
+        ids, excluded = self.select(state)
+        return RoundDecision(allocations=self.allocate(ids, state),
+                             excluded=excluded,
+                             budget_hz=state.budget_hz).validate()
+
+    def select(self, state: RoundState) -> tuple[list[int], dict[int, str]]:
+        """-> (selected ids, {excluded id: reason})."""
+        raise NotImplementedError
+
+    def allocate(self, ids, state: RoundState) -> dict[int, Allocation]:
+        """Split the round budget over the selected ids (default: equal)."""
+        ids = [int(i) for i in ids]
+        if not ids:
+            return {}
+        w = state.budget_hz / len(ids)
+        return {i: Allocation(bandwidth_hz=w) for i in ids}
+
+    # shared proposal: sample k uniformly (the paper's protocol)
+    @staticmethod
+    def _uniform_ids(state: RoundState) -> list[int]:
+        n = len(state.est.clients)
+        pick = state.rng.choice(n, size=min(state.k, n), replace=False)
+        return [int(state.est.clients[i]) for i in pick]
+
+
+class UniformPolicy(AllocationPolicy):
+    """Uniform cohort, equal bandwidth split — the paper's protocol."""
+    name = "uniform"
+
+    def select(self, state):
+        return self._uniform_ids(state), {}
+
+
+class DeadlinePolicy(AllocationPolicy):
+    """Uniform proposal, then exclude predicted stragglers past
+    ``deadline_s``.  Keeps at least ``min_clients`` (the fastest) so a
+    tight deadline can never stall training entirely.  Survivors share
+    the full budget equally, so dropping stragglers also widens everyone
+    else's subchannel."""
+    name = "deadline"
+
+    def __init__(self, deadline_s: float, min_clients: int = 1):
+        self.deadline_s = float(deadline_s)
+        self.min_clients = int(min_clients)
+
+    def select(self, state):
+        sub = state.est.for_ids(self._uniform_ids(state))
+        keep = sub.time_s <= self.deadline_s
+        if keep.sum() < self.min_clients:
+            order = np.argsort(sub.time_s)
+            keep = np.zeros(len(sub.clients), dtype=bool)
+            keep[order[:self.min_clients]] = True
+        selected = [int(c) for c in sub.clients[keep]]
+        excluded = {int(c): f"predicted finish {t:.3g}s > deadline "
+                            f"{self.deadline_s:g}s"
+                    for c, t in zip(sub.clients[~keep], sub.time_s[~keep])}
+        return selected, excluded
+
+    def allocate(self, ids, state):
+        return {i: Allocation(bandwidth_hz=a.bandwidth_hz,
+                              deadline_s=self.deadline_s)
+                for i, a in super().allocate(ids, state).items()}
+
+
+class EnergyThresholdPolicy(AllocationPolicy):
+    """Exclude depleted clients (battery below ``battery_floor_j``) and
+    clients whose predicted round energy exceeds ``round_budget_j`` —
+    arXiv:2104.05509's threshold exclusion, expressed as an allocation
+    of zero."""
+    name = "energy_threshold"
+
+    def __init__(self, battery_floor_j: float = 0.0,
+                 round_budget_j: float = float("inf")):
+        self.battery_floor_j = float(battery_floor_j)
+        self.round_budget_j = float(round_budget_j)
+
+    def select(self, state):
+        est = state.est
+        ok = ((est.battery_j > self.battery_floor_j)
+              & (est.energy_j <= self.round_budget_j)
+              & (est.energy_j <= est.battery_j))
+        excluded = {}
+        for c, e, b in zip(est.clients[~ok], est.energy_j[~ok],
+                           est.battery_j[~ok]):
+            excluded[int(c)] = (
+                f"battery {b:.3g}J under floor {self.battery_floor_j:g}J"
+                if b <= self.battery_floor_j else
+                f"round energy {e:.3g}J over budget "
+                f"{min(self.round_budget_j, b):.3g}J")
+        eligible = est.clients[ok]
+        if len(eligible) == 0:
+            return [], excluded
+        pick = state.rng.choice(len(eligible),
+                                size=min(state.k, len(eligible)),
+                                replace=False)
+        return [int(eligible[i]) for i in pick], excluded
+
+
+class CapacityProportionalPolicy(AllocationPolicy):
+    """Sample the cohort with P(k) ∝ 1 / t_k (predicted capacity), the
+    selection reading of arXiv:1910.13067; equal bandwidth split.
+
+    Approximation note: ``rng.choice(..., replace=False, p=p)`` draws
+    sequentially with renormalization after each pick, which is NOT the
+    exact "probability-proportional-to-size without replacement" design
+    (inclusion probabilities differ from k·p_k, most visibly for heavy
+    p's near 1/k).  It preserves the intended ordering — faster clients
+    are strictly more likely — which is all the policy relies on."""
+    name = "capacity_proportional"
+
+    def select(self, state):
+        est = state.est
+        n = len(est.clients)
+        cap = 1.0 / np.maximum(est.time_s, 1e-9)
+        cap = np.where(np.isfinite(cap), cap, 0.0)
+        p = cap / cap.sum()
+        assert math.isclose(float(p.sum()), 1.0, rel_tol=1e-9), \
+            f"selection probabilities must renormalize to 1, got {p.sum()}"
+        pick = state.rng.choice(n, size=min(state.k, n), replace=False, p=p)
+        return [int(est.clients[i]) for i in pick], {}
+
+
+class BandwidthOptPolicy(AllocationPolicy):
+    """Minimize the sync-round barrier max_k t_k under Σ_k W_k ≤ budget.
+
+    The arXiv:1910.13067 capacity form: client k finishing by time T
+    needs W_k(T) = bits / (s_k · (T − t_comp,k)) with s_k = log2(1+γ_k)
+    its spectral efficiency this round.  Each W_k(T) is decreasing in T,
+    so the minimal feasible barrier T* solves Σ_k W_k(T) = budget —
+    found by bisection; the slack from the final bracket is handed back
+    pro rata so the full budget is always in the air.  The cohort itself
+    is the paper's uniform sample, which keeps bytes (and, under a fixed
+    seed, the cohort) identical to ``uniform`` — only the per-client
+    subchannel widths, and therefore the barrier, change."""
+    name = "bandwidth_opt"
+
+    def __init__(self, iters: int = 64):
+        self.iters = int(iters)
+
+    def select(self, state):
+        return self._uniform_ids(state), {}
+
+    def allocate(self, ids, state):
+        ids = [int(i) for i in ids]
+        if not ids:
+            return {}
+        bits = state.up_bits()
+        if bits <= 0.0:          # nothing to upload: any split is optimal
+            return super().allocate(ids, state)
+        pos = {int(c): i for i, c in enumerate(state.est.clients)}
+        sel = np.asarray([pos[i] for i in ids], dtype=int)
+        s = np.maximum(state.spectral_eff[sel], 1e-9)   # bits/s/Hz
+        tc = np.asarray(state.t_comp_s[sel], dtype=float)
+        bits = bits * state.mult()[sel]   # m slots on one device = m payloads
+        budget = float(state.budget_hz)
+
+        def need(T: float) -> float:
+            gap = T - tc
+            if np.any(gap <= 0.0):
+                return float("inf")
+            return float((bits / (s * gap)).sum())
+
+        lo = float(tc.max())                  # infeasible: zero air time
+        hi = max(2.0 * lo, lo + 1e-6)
+        for _ in range(200):
+            if need(hi) <= budget:
+                break
+            hi *= 2.0
+        for _ in range(self.iters):
+            mid = 0.5 * (lo + hi)
+            if need(mid) <= budget:
+                hi = mid
+            else:
+                lo = mid
+        w = bits / (s * np.maximum(hi - tc, 1e-12))
+        w *= budget / w.sum()                 # hand back the bracket slack
+        return {i: Allocation(bandwidth_hz=float(wk))
+                for i, wk in zip(ids, w)}
+
+
+class AdaptiveCodecPolicy(AllocationPolicy):
+    """Uniform cohort + equal split, but each client's top-k upload ratio
+    is scheduled from its sampled channel rate: a client whose allocated
+    subchannel is r× the cohort median runs top-k at ``ratio`` · r
+    (clipped to [ratio_floor, 1]), so slow links send sparser payloads
+    and the uplink barrier flattens.  A client whose scheduled format
+    would cost at least as many wire bytes as the base codec (top-k
+    ships value + index, 8 B per kept element, so ratio ≥ 0.5 dominates
+    a dense 4 B/element payload) keeps the base codec instead —
+    sparsifying is only ever a discount.  Sparsification zeroes
+    coordinates, which only additive payloads survive — the policy
+    refuses non-summable plans (``needs_summable``)."""
+    name = "adaptive_codec"
+    needs_summable = True
+
+    def __init__(self, ratio: float = 0.25, ratio_floor: float = 0.02):
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"adaptive_codec ratio must be in (0, 1], "
+                             f"got {ratio}")
+        self.ratio = float(ratio)
+        self.ratio_floor = float(ratio_floor)
+
+    def select(self, state):
+        return self._uniform_ids(state), {}
+
+    def allocate(self, ids, state):
+        if not state.summable:
+            raise ValueError(
+                "adaptive_codec schedules per-client top-k sparsification, "
+                "which is only meaningful for additive (summable) payloads; "
+                "this plan uploads distinct models/components")
+        from repro.fed.codecs import TopKCodec  # late: avoid edge<->fed cycle
+
+        base = super().allocate(ids, state)
+        if not base:
+            return base
+        pos = {int(c): i for i, c in enumerate(state.est.clients)}
+        sel = np.asarray([pos[int(i)] for i in ids], dtype=int)
+        rate = (np.asarray([base[int(i)].bandwidth_hz for i in ids])
+                * np.maximum(state.spectral_eff[sel], 1e-9))
+        ref = float(np.median(rate))
+        ratios = np.clip(self.ratio * rate / max(ref, 1e-12),
+                         self.ratio_floor, 1.0)
+        base_bytes = sum(state.wire_bytes(None))
+        out = {}
+        for i, r in zip(ids, ratios):
+            codec = TopKCodec(float(r))
+            if sum(state.wire_bytes(codec)) >= base_bytes:
+                codec = None    # dominated format: keep the base codec
+            out[int(i)] = Allocation(
+                bandwidth_hz=base[int(i)].bandwidth_hz, codec=codec)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors repro.fed.strategies / repro.fed.codecs)
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[..., AllocationPolicy]] = {}
+
+
+def register(name: str,
+             factory: Optional[Callable[..., AllocationPolicy]] = None):
+    """Register ``factory(**knobs) -> AllocationPolicy`` under ``name``.
+    Usable as a decorator on a policy class or called directly."""
+
+    def _do(f):
+        try:
+            f.name = name
+        except (AttributeError, TypeError):
+            pass
+        _REGISTRY[name] = f
+        return f
+
+    return _do if factory is None else _do(factory)
+
+
+def get(name: str) -> Callable[..., AllocationPolicy]:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown allocation policy {name!r}; known: {names()}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_policy(name: str, **kw) -> AllocationPolicy:
+    """Build a policy by name.  ``kw`` may be a superset of the policy's
+    knobs (EdgeConfig passes every policy knob it carries); anything the
+    factory does not accept is dropped."""
+    factory = get(name)
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return factory(**kw)
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return factory(**kw)
+    return factory(**{k: v for k, v in kw.items() if k in params})
+
+
+register("uniform", UniformPolicy)
+register("deadline", DeadlinePolicy)
+register("energy_threshold", EnergyThresholdPolicy)
+register("capacity_proportional", CapacityProportionalPolicy)
+register("bandwidth_opt", BandwidthOptPolicy)
+register("adaptive_codec", AdaptiveCodecPolicy)

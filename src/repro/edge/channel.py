@@ -60,20 +60,44 @@ class Channel:
         snr = self._snr_lin
         if self.cfg.fading == "rayleigh":
             snr = snr * self._rng.exponential(1.0, self.num_clients)
+        # this round's effective per-client SNR: set_bandwidth() re-derives
+        # rates from it when an AllocationPolicy reapportions the budget
+        self._snr_round = snr
         return self.cfg.bandwidth_hz * np.log2(1.0 + snr)
 
     def sample(self) -> np.ndarray:
-        """Re-draw fading for a new round; returns uplink rates (bit/s)."""
+        """Re-draw fading for a new round; returns uplink rates (bit/s)
+        at the nominal per-client subchannel ``cfg.bandwidth_hz``."""
         self.rates_bps = self._draw_rates()
         return self.rates_bps
 
     # ------------------------------------------------------------------
-    def uplink_time_s(self, n_bytes: float, clients) -> np.ndarray:
-        """Per-client transmission time for an ``n_bytes`` payload."""
-        r = self.rates_bps[np.asarray(clients, dtype=int)]
-        return 8.0 * float(n_bytes) / np.maximum(r, 1e-6)
+    def spectral_efficiency(self, clients) -> np.ndarray:
+        """Per-client bits/s/Hz under this round's fading draw,
+        log2(1 + γ_k·h_k) — the capacity form per unit bandwidth that a
+        resource-allocation policy (arXiv:1910.13067) divides the budget
+        against."""
+        c = np.asarray(clients, dtype=int)
+        return np.log2(1.0 + self._snr_round[c])
 
-    def uplink_energy_j(self, n_bytes: float, clients) -> np.ndarray:
+    def set_bandwidth(self, clients, bandwidth_hz) -> None:
+        """Apply a RoundDecision's per-client subchannel widths for this
+        round: rate_k = W_k · log2(1 + γ_k·h_k).  ``bandwidth_hz`` is a
+        scalar (equal split) or an array aligned with ``clients``; the
+        next ``sample()`` resets everyone to the nominal width."""
+        c = np.asarray(clients, dtype=int)
+        w = np.broadcast_to(np.asarray(bandwidth_hz, dtype=float), c.shape)
+        self.rates_bps[c] = w * np.log2(1.0 + self._snr_round[c])
+
+    def uplink_time_s(self, n_bytes, clients) -> np.ndarray:
+        """Per-client transmission time; ``n_bytes`` is a scalar or an
+        array aligned with ``clients`` (per-client codecs differ)."""
+        c = np.asarray(clients, dtype=int)
+        r = self.rates_bps[c]
+        b = np.broadcast_to(np.asarray(n_bytes, dtype=float), c.shape)
+        return 8.0 * b / np.maximum(r, 1e-6)
+
+    def uplink_energy_j(self, n_bytes, clients) -> np.ndarray:
         return self.cfg.tx_power_w * self.uplink_time_s(n_bytes, clients)
 
     def downlink_time_s(self, n_bytes: float) -> float:
@@ -99,16 +123,23 @@ class Channel:
             return self.comm_round_time_split(n_bytes, 0.0, clients)
         return self.comm_round_time_split(0.0, n_bytes, clients)
 
-    def comm_round_time_split(self, agg_bytes: float, nonagg_bytes: float,
+    def comm_round_time_split(self, agg_bytes, nonagg_bytes,
                               clients) -> float:
         """Upload-phase wall time for a payload that is part aggregatable
         (summed in-network: gradients/FIM) and part not (distinct local
         models the server must see individually) — e.g. FedDANE's
-        gradient + model phases."""
+        gradient + model phases.  Byte args are scalars or per-client
+        arrays aligned with ``clients`` (heterogeneous upload codecs)."""
         clients = np.asarray(clients, dtype=int)
         k = clients.size
-        total = float(agg_bytes) + float(nonagg_bytes)
-        if k == 0 or total <= 0:
+        if k == 0:
+            return 0.0
+        agg = np.broadcast_to(np.asarray(agg_bytes, dtype=float),
+                              clients.shape)
+        nonagg = np.broadcast_to(np.asarray(nonagg_bytes, dtype=float),
+                                 clients.shape)
+        total = agg + nonagg
+        if total.sum() <= 0:
             return 0.0
         per = self.uplink_time_s(total, clients)
         srv = max(self.cfg.server_rate_bps, 1e-6)
@@ -116,11 +147,13 @@ class Channel:
             # aggregation parents are chosen among well-connected neighbours,
             # so a level costs a *representative* (median) hop, not the
             # fleet-worst deep fade.  Aggregatable bytes cross the server
-            # link ONCE (O(d log τ)); non-aggregatable bytes cross it k
-            # times (Theorem 3's O(k·d) survives the topology change).
+            # link ONCE as a single summed payload — sized by the densest
+            # contribution (O(d log τ)); non-aggregatable bytes cross it
+            # once per client (Theorem 3's O(k·d) survives the topology
+            # change).
             depth = max(1, math.ceil(math.log2(max(k, 2))))
             hops = depth * float(np.median(per))
-            return hops + 8.0 * (agg_bytes + k * nonagg_bytes) / srv
+            return hops + 8.0 * (float(agg.max()) + float(nonagg.sum())) / srv
         # star: subchannel air times in parallel, then every payload (both
         # classes) must cross the shared server slice
-        return max(float(per.max()), 8.0 * k * total / srv)
+        return max(float(per.max()), 8.0 * float(total.sum()) / srv)

@@ -1,43 +1,62 @@
 """EdgeConfig + EdgeRuntime: the glue under ``FederatedRun``.
 
 ``EdgeConfig`` is an optional field on ``FedConfig``; when present, the
-federated loop routes client selection through a scheduling policy and
-converts every round's (already ledger-counted) bytes plus the client
-compute work into simulated wall-clock time and energy:
+federated loop routes client selection AND per-client resource
+allocation through an :class:`repro.edge.allocation.AllocationPolicy`
+and converts every round's (already ledger-counted) bytes plus the
+client compute work into simulated wall-clock time and energy:
 
   sync round   wall = t_downlink + max_k t_comp,k + t_agg(topology)
   async round  wall = until the aggregation buffer fills (stragglers
                       land in later buffers, staleness-discounted)
 
-The runtime never changes WHAT is transmitted — `CommLedger` byte counts
-are scheduler-independent — only WHO transmits and WHEN it lands.
+Each round the policy sees a :class:`RoundState` (eligible clients with
+cost estimates under a nominal equal split of ``bandwidth_budget_hz``)
+and returns a :class:`RoundDecision`: per selected client an uplink
+subchannel width drawn from the shared budget and, optionally, a
+per-client upload codec.  Bandwidth-only policies never change WHAT is
+transmitted — `CommLedger` byte counts are allocation-independent, only
+WHO transmits, WHEN it lands, and HOW FAST it crosses the air change;
+per-client codecs change bytes only through their ``wire_bytes``, and
+the ledger still equals the plan per client.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
+from repro.edge.allocation import (ClientEstimate, RoundDecision, RoundState,
+                                   make_policy)
 from repro.edge.async_agg import AsyncAggregator
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet
 from repro.edge.events import EventClock
-from repro.edge.scheduler import ClientEstimate, make_scheduler
 
 
 @dataclass(frozen=True)
 class EdgeConfig:
     """Knobs for the simulated wireless edge (all times seconds, energies
-    joules).  ``scheduler`` ∈ {uniform, deadline, energy_threshold,
-    capacity_proportional}; ``mode`` ∈ {sync, async}."""
+    joules).  ``scheduler`` names the allocation policy (the legacy field
+    name is kept): uniform | deadline | energy_threshold |
+    capacity_proportional | bandwidth_opt | adaptive_codec, or any
+    registered ``repro.edge.allocation`` name; ``mode`` ∈ {sync, async}.
+
+    ``bandwidth_budget_hz`` is the shared round uplink budget every
+    policy apportions; 0 (default) resolves to ``k × channel.bandwidth_hz``
+    — the equal-split policies then reproduce the fixed-subchannel
+    behavior exactly at full cohort."""
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     device: DeviceConfig = field(default_factory=DeviceConfig)
-    scheduler: str = "uniform"
+    scheduler: str = "uniform"           # allocation-policy name
+    bandwidth_budget_hz: float = 0.0     # 0 -> k * channel.bandwidth_hz
     deadline_s: float = 1.0              # deadline policy
     min_clients: int = 1
     battery_floor_j: float = 0.0         # energy_threshold policy
     round_budget_j: float = float("inf")
+    adaptive_ratio: float = 0.25         # adaptive_codec: top-k ratio at the
+    adaptive_ratio_floor: float = 0.02   # cohort-median rate, and its floor
     mode: str = "sync"
     buffer_size: int = 0                 # async: 0 -> ceil(cohort/2)
     staleness_alpha: float = 0.5         # async: (1+τ)^-alpha discount
@@ -56,10 +75,13 @@ class EdgeRuntime:
         self.fleet = DeviceFleet(cfg.device, num_clients, seed=s + 2)
         self.rng = np.random.default_rng(s + 3)
         self.clock = EventClock()
-        self.scheduler = make_scheduler(
+        # make_policy drops the knobs a policy does not accept, so every
+        # EdgeConfig knob can ride along unconditionally
+        self.policy = make_policy(
             cfg.scheduler, deadline_s=cfg.deadline_s,
             min_clients=cfg.min_clients, battery_floor_j=cfg.battery_floor_j,
-            round_budget_j=cfg.round_budget_j)
+            round_budget_j=cfg.round_budget_j, ratio=cfg.adaptive_ratio,
+            ratio_floor=cfg.adaptive_ratio_floor)
         self.async_agg: Optional[AsyncAggregator] = None
         if cfg.mode == "async":
             # buffer_size 0 = auto: half the dispatched cohort, resolved at
@@ -68,15 +90,33 @@ class EdgeRuntime:
                 self.clock, buffer_size=max(cfg.buffer_size, 1),
                 alpha=cfg.staleness_alpha)
         self.busy: set[int] = set()      # async: clients with work in flight
+        self._held_hz: dict[int, float] = {}  # async: spectrum still on the
+                                              # air from earlier dispatches
         self._buffer_resolved = False    # async auto-buffer picked yet?
         self.energy_j = 0.0
         self.dropped_total = 0
         self.history: list[dict] = []
+        self.decisions: list[RoundDecision] = []
 
     # ------------------------------------------------------------------
-    def estimate(self, clients, up_bytes: float, flops) -> ClientEstimate:
-        """Predicted per-client round cost.  ``flops`` is scalar or (n,)
-        aligned with ``clients`` (local work scales with |D_k|)."""
+    def budget_hz(self, k: int) -> float:
+        """The shared round bandwidth budget (0 = auto: k subchannels).
+        In async mode, spectrum still held by in-flight uploads from
+        earlier dispatches is subtracted — a straggler keeps its granted
+        subchannel until its payload lands, so a new cohort can only be
+        carved from what is actually free (the pool is never
+        oversubscribed; with the auto budget and equal splits this
+        reproduces the fixed-subchannel model exactly)."""
+        if self.cfg.bandwidth_budget_hz > 0:
+            total = float(self.cfg.bandwidth_budget_hz)
+        else:
+            total = float(max(k, 1)) * self.channel.cfg.bandwidth_hz
+        return max(total - sum(self._held_hz.values()), 0.0)
+
+    def estimate(self, clients, up_bytes, flops) -> ClientEstimate:
+        """Predicted per-client round cost at the channel's CURRENT
+        per-client rates.  ``up_bytes`` and ``flops`` are scalars or (n,)
+        arrays aligned with ``clients`` (per-client codecs / |D_k|)."""
         c = np.asarray(clients, dtype=int)
         fl = np.broadcast_to(np.asarray(flops, dtype=float), c.shape)
         t_comp = fl / np.maximum(self.fleet.flops_per_s[c], 1.0)
@@ -87,51 +127,144 @@ class EdgeRuntime:
                               energy_j=e_comp + e_tx,
                               battery_j=self.fleet.battery_j[c].copy())
 
-    def select(self, k: int, eligible, up_bytes: float, flops
-               ) -> tuple[list[int], ClientEstimate]:
+    def _empty_est(self) -> ClientEstimate:
+        return ClientEstimate(np.zeros(0, int), np.zeros(0), np.zeros(0),
+                              np.zeros(0))
+
+    def _round_state(self, k: int, clients: np.ndarray, wire_fn, flops,
+                     summable: bool, codec=None, payload_mult=None
+                     ) -> RoundState:
+        """Nominal equal split of the budget -> estimates -> RoundState."""
+        budget = self.budget_hz(k)
+        self.channel.set_bandwidth(clients, budget / max(k, 1))
+        agg0, nonagg0 = wire_fn(None)
+        mult = (np.ones(clients.shape) if payload_mult is None
+                else np.asarray(payload_mult, dtype=float))
+        fl = np.broadcast_to(np.asarray(flops, dtype=float), clients.shape)
+        est = self.estimate(clients, (agg0 + nonagg0) * mult, fl)
+        t_comp = fl / np.maximum(self.fleet.flops_per_s[clients], 1.0)
+        return RoundState(
+            k=k, est=est, t_comp_s=t_comp,
+            spectral_eff=self.channel.spectral_efficiency(clients),
+            budget_hz=budget, rng=self.rng, codec=codec, summable=summable,
+            wire_fn=wire_fn, payload_mult=payload_mult)
+
+    def _apply(self, decision: RoundDecision, state: RoundState, wire_fn,
+               flops) -> ClientEstimate:
+        """Commit a decision: per-client subchannel widths into the
+        channel, then re-estimate the selected cohort at its allocated
+        rates and per-client wire bytes.  ``flops`` aligns with
+        ``state.est.clients``."""
+        self.decisions.append(decision)
+        self.dropped_total += len(decision.excluded)
+        sel = decision.selected
+        if not sel:
+            return self._empty_est()
+        pos = {int(c): j for j, c in enumerate(state.est.clients)}
+        missing = [int(i) for i in sel if int(i) not in pos]
+        if missing:
+            raise ValueError(
+                f"allocation policy {self.policy.name!r} selected client "
+                f"ids {missing} outside the round's eligible set of "
+                f"{len(state.est.clients)} clients")
+        self.channel.set_bandwidth(sel, decision.bandwidth())
+        mult = state.mult()
+        up = np.asarray([sum(wire_fn(decision.codec_for(i)))
+                         * mult[pos[int(i)]] for i in sel], dtype=float)
+        fl_sel = np.asarray([flops[pos[int(i)]] for i in sel], dtype=float)
+        return self.estimate(sel, up, fl_sel)
+
+    def decide(self, k: int, eligible, wire_fn: Callable, flops,
+               summable: bool = True, codec=None
+               ) -> tuple[list[int], ClientEstimate, RoundDecision]:
         """Start a round: re-draw fading, filter dead clients, run the
-        scheduling policy.  Returns (cohort, estimates for the cohort)."""
+        allocation policy.  ``wire_fn(codec_override|None)`` maps a codec
+        to one client's (aggregatable, non-aggregatable) upload wire
+        bytes.  Returns (cohort ids, allocation-aware estimates for the
+        cohort, the RoundDecision)."""
         self.channel.sample()
-        alive = self.fleet.alive(np.asarray(eligible, dtype=int))
+        eligible = np.asarray(eligible, dtype=int)
+        alive = self.fleet.alive(eligible)
         if alive.size == 0:
-            return [], ClientEstimate(np.zeros(0, int), np.zeros(0),
-                                      np.zeros(0), np.zeros(0))
-        fl = np.broadcast_to(np.asarray(flops, dtype=float),
-                             np.asarray(eligible).shape)
-        keep = np.isin(np.asarray(eligible, dtype=int), alive)
-        est = self.estimate(np.asarray(eligible, dtype=int)[keep],
-                            up_bytes, fl[keep])
-        selected, dropped = self.scheduler.select(k, est, self.rng)
-        self.dropped_total += len(dropped)
-        return selected, est.for_ids(selected)
+            decision = RoundDecision(budget_hz=self.budget_hz(k))
+            self.decisions.append(decision)
+            return [], self._empty_est(), decision
+        fl = np.broadcast_to(np.asarray(flops, dtype=float), eligible.shape)
+        keep = np.isin(eligible, alive)
+        state = self._round_state(k, eligible[keep], wire_fn, fl[keep],
+                                  summable, codec)
+        decision = self.policy.decide(state)
+        est_sel = self._apply(decision, state, wire_fn, fl[keep])
+        if self.async_agg is not None:
+            # the grant persists until the upload lands (pop_async_buffer
+            # releases it); only this driver path dispatches into the
+            # buffer, so only it holds spectrum
+            for i in decision.selected:
+                self._held_hz[int(i)] = decision.allocations[i].bandwidth_hz
+        return decision.selected, est_sel, decision
+
+    def allocate_for(self, clients, wire_fn: Callable, flops,
+                     summable: bool = True, codec=None
+                     ) -> tuple[ClientEstimate, RoundDecision]:
+        """Allocation without selection: the cohort is already fixed
+        (the vmapped simulator path), so run only the policy's
+        ``allocate`` stage over it and commit the result.
+
+        Cohort slots may repeat a fleet entry (the with_edge mod
+        fallback when the cohort outnumbers the fleet): a device has one
+        radio, so it gets ONE subchannel and carries one payload per
+        slot — the returned estimate covers the unique clients with
+        their payload multiplicity priced in, never silently dropping
+        slots.  The budget is still provisioned per slot (k × W auto)."""
+        clients = np.asarray(clients, dtype=int)
+        self.channel.sample()
+        fl = np.broadcast_to(np.asarray(flops, dtype=float), clients.shape)
+        uniq, inv, counts = np.unique(clients, return_inverse=True,
+                                      return_counts=True)
+        fl_uniq = np.zeros(len(uniq))
+        np.add.at(fl_uniq, inv, fl)
+        # payload_mult: m slots on one device = m payloads over its single
+        # subchannel — the policy sizes allocations against m·bits, and
+        # the estimates/clock bill every slot
+        state = self._round_state(len(clients), uniq, wire_fn, fl_uniq,
+                                  summable, codec, payload_mult=counts)
+        decision = RoundDecision(
+            allocations=self.policy.allocate([int(c) for c in uniq], state),
+            excluded={}, budget_hz=state.budget_hz).validate()
+        est_sel = self._apply(decision, state, wire_fn, fl_uniq)
+        return est_sel, decision
 
     # ------------------------------------------------------------------
-    def finish_round_sync(self, est_sel: ClientEstimate, up_bytes: float,
+    def finish_round_sync(self, est_sel: ClientEstimate, up_bytes,
                           down_bytes: float, aggregatable: bool = True,
-                          nonagg_bytes: Optional[float] = None) -> dict:
+                          nonagg_bytes=None) -> dict:
         """Advance the clock over a synchronous round and drain batteries.
 
         star: barrier at the slowest client's compute+uplink finish.
         tree: compute barrier, then the aggregation phase (log2(τ) hops
         for summable payloads, serialized root link otherwise).
 
-        ``nonagg_bytes`` carves that many of ``up_bytes`` out as
+        ``up_bytes`` / ``nonagg_bytes`` are scalars or per-client arrays
+        aligned with ``est_sel.clients`` (heterogeneous codecs);
+        ``nonagg_bytes`` carves that share of ``up_bytes`` out as
         non-aggregatable (mixed payloads, e.g. FedDANE's gradient + model
-        phases); when given it overrides ``aggregatable``."""
-        t_down = self.channel.downlink_time_s(down_bytes)
+        phases) and overrides ``aggregatable`` when given."""
         c = est_sel.clients
-        if nonagg_bytes is None:
-            agg, nonagg = ((up_bytes, 0.0) if aggregatable
-                           else (0.0, up_bytes))
-        else:
-            nonagg = min(float(nonagg_bytes), float(up_bytes))
-            agg = float(up_bytes) - nonagg
         if c.size == 0:
             # empty cohort: nothing is broadcast or transmitted — the
             # clock must agree with the ledger's zero-byte round
             return self._record(0.0, 0.0, c)
+        t_down = self.channel.downlink_time_s(down_bytes)
+        up = np.broadcast_to(np.asarray(up_bytes, dtype=float), c.shape)
+        if nonagg_bytes is None:
+            nonagg = up * 0.0 if aggregatable else up
+        else:
+            nonagg = np.minimum(
+                np.broadcast_to(np.asarray(nonagg_bytes, dtype=float),
+                                c.shape), up)
+        agg = up - nonagg
         if self.channel.cfg.topology == "tree":
-            fl_t = est_sel.time_s - self.channel.uplink_time_s(up_bytes, c)
+            fl_t = est_sel.time_s - self.channel.uplink_time_s(up, c)
             t_round = float(np.max(fl_t)) + self.channel.comm_round_time_split(
                 agg, nonagg, c)
         else:
@@ -175,6 +308,7 @@ class EdgeRuntime:
         entries, w = self.async_agg.pop_buffer()
         for e in entries:
             self.busy.discard(e.client)
+            self._held_hz.pop(e.client, None)  # subchannel released
         self._record(self.clock.now - t0, 0.0,
                      np.asarray([e.client for e in entries], int))
         return entries, w

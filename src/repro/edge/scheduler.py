@@ -1,137 +1,27 @@
-"""Client-selection policies for the edge runtime.
+"""Back-compat shim: the client-selection ``Scheduler`` surface became
+the per-client resource-allocation API in :mod:`repro.edge.allocation`.
 
-Every scheduler sees the same picture — the eligible client ids and a
-per-client ``ClientEstimate`` (predicted round time and energy under the
-current channel/fleet state) — and returns the cohort to dispatch plus
-the ids it deliberately excluded.  Bytes are policy-independent; only
-who transmits (and therefore the round's wall time and energy) changes.
-
-Policies:
-  * uniform              — sample k uniformly (the paper's protocol).
-  * deadline             — uniform proposal, then drop clients whose
-                           predicted finish exceeds the round deadline
-                           (straggler dropping; the quantile-barrier view
-                           of synchronous FEEL).
-  * energy_threshold     — exclude clients whose battery is below a floor
-                           or whose round energy exceeds a per-round
-                           budget, à la the threshold-based data-exclusion
-                           design of arXiv:2104.05509.
-  * capacity_proportional— sample with probability proportional to
-                           predicted capacity 1/t_k (fast links + fast
-                           devices more likely), the resource-allocation
-                           reading of arXiv:1910.13067.
+The old ``Scheduler.select(k, est, rng) -> (ids, dropped)`` could only
+say *who* transmits; the paper's formulation allocates *how much* of the
+wireless budget each client gets.  ``AllocationPolicy.decide(RoundState)
+-> RoundDecision`` returns, per selected client, an ``Allocation``
+(bandwidth from a shared round budget, optional per-client codec,
+deadline) plus the excluded ids with reasons.  The four legacy policies
+live on as uniform-split allocation policies under their
+``make_scheduler``-era names (``uniform`` / ``deadline`` /
+``energy_threshold`` / ``capacity_proportional``), constructible through
+the same ``EdgeConfig`` knobs.
 """
-from __future__ import annotations
+from repro.edge.allocation import (  # noqa: F401
+    Allocation, AllocationPolicy, CapacityProportionalPolicy, ClientEstimate,
+    DeadlinePolicy, EnergyThresholdPolicy, RoundDecision, RoundState,
+    UniformPolicy, make_policy,
+)
 
-from dataclasses import dataclass
-
-import numpy as np
-
-
-@dataclass
-class ClientEstimate:
-    """Predicted per-client round cost under current channel/fleet state."""
-    clients: np.ndarray      # (n,) eligible ids
-    time_s: np.ndarray       # (n,) predicted compute + uplink time
-    energy_j: np.ndarray     # (n,) predicted compute + uplink energy
-    battery_j: np.ndarray    # (n,) remaining budget
-
-    def for_ids(self, ids) -> "ClientEstimate":
-        pos = {int(c): i for i, c in enumerate(self.clients)}
-        sel = np.asarray([pos[int(i)] for i in ids], dtype=int)
-        return ClientEstimate(self.clients[sel], self.time_s[sel],
-                              self.energy_j[sel], self.battery_j[sel])
-
-
-class Scheduler:
-    name = "base"
-
-    def select(self, k: int, est: ClientEstimate, rng: np.random.Generator
-               ) -> tuple[list[int], list[int]]:
-        """-> (selected ids, excluded ids).  k is the target cohort size."""
-        raise NotImplementedError
-
-
-class UniformScheduler(Scheduler):
-    name = "uniform"
-
-    def select(self, k, est, rng):
-        n = len(est.clients)
-        pick = rng.choice(n, size=min(k, n), replace=False)
-        return [int(est.clients[i]) for i in pick], []
-
-
-class DeadlineScheduler(Scheduler):
-    """Uniform proposal, then drop predicted stragglers past ``deadline_s``.
-
-    Keeps at least ``min_clients`` (the fastest) so a tight deadline can
-    never stall training entirely."""
-    name = "deadline"
-
-    def __init__(self, deadline_s: float, min_clients: int = 1):
-        self.deadline_s = float(deadline_s)
-        self.min_clients = int(min_clients)
-
-    def select(self, k, est, rng):
-        n = len(est.clients)
-        pick = rng.choice(n, size=min(k, n), replace=False)
-        sub = est.for_ids(est.clients[pick])
-        keep = sub.time_s <= self.deadline_s
-        if keep.sum() < self.min_clients:
-            order = np.argsort(sub.time_s)
-            keep = np.zeros(len(sub.clients), dtype=bool)
-            keep[order[:self.min_clients]] = True
-        selected = [int(c) for c in sub.clients[keep]]
-        dropped = [int(c) for c in sub.clients[~keep]]
-        return selected, dropped
-
-
-class EnergyThresholdScheduler(Scheduler):
-    """Exclude depleted clients (battery below ``battery_floor_j``) and
-    clients whose predicted round energy exceeds ``round_budget_j``."""
-    name = "energy_threshold"
-
-    def __init__(self, battery_floor_j: float = 0.0,
-                 round_budget_j: float = float("inf")):
-        self.battery_floor_j = float(battery_floor_j)
-        self.round_budget_j = float(round_budget_j)
-
-    def select(self, k, est, rng):
-        ok = ((est.battery_j > self.battery_floor_j)
-              & (est.energy_j <= self.round_budget_j)
-              & (est.energy_j <= est.battery_j))
-        eligible = est.clients[ok]
-        excluded = [int(c) for c in est.clients[~ok]]
-        if len(eligible) == 0:
-            return [], excluded
-        pick = rng.choice(len(eligible), size=min(k, len(eligible)),
-                          replace=False)
-        return [int(eligible[i]) for i in pick], excluded
-
-
-class CapacityProportionalScheduler(Scheduler):
-    """Sample without replacement with P(k) ∝ 1 / t_k (predicted)."""
-    name = "capacity_proportional"
-
-    def select(self, k, est, rng):
-        n = len(est.clients)
-        cap = 1.0 / np.maximum(est.time_s, 1e-9)
-        p = cap / cap.sum()
-        pick = rng.choice(n, size=min(k, n), replace=False, p=p)
-        return [int(est.clients[i]) for i in pick], []
-
-
-def make_scheduler(name: str, **kw) -> Scheduler:
-    if name == "uniform":
-        return UniformScheduler()
-    if name == "deadline":
-        return DeadlineScheduler(deadline_s=kw.get("deadline_s", 1.0),
-                                 min_clients=kw.get("min_clients", 1))
-    if name == "energy_threshold":
-        return EnergyThresholdScheduler(
-            battery_floor_j=kw.get("battery_floor_j", 0.0),
-            round_budget_j=kw.get("round_budget_j", float("inf")))
-    if name == "capacity_proportional":
-        return CapacityProportionalScheduler()
-    raise ValueError(f"unknown scheduler {name!r}; known: uniform, deadline, "
-                     "energy_threshold, capacity_proportional")
+# legacy aliases (PR-1 names); new code should import from edge.allocation
+Scheduler = AllocationPolicy
+UniformScheduler = UniformPolicy
+DeadlineScheduler = DeadlinePolicy
+EnergyThresholdScheduler = EnergyThresholdPolicy
+CapacityProportionalScheduler = CapacityProportionalPolicy
+make_scheduler = make_policy

@@ -72,6 +72,28 @@ class CommLedger:
         else:
             self.up_tree_bytes += payload * n_clients
 
+    def upload_per_client(self, wire_bytes, aggregatable: bool = True) -> None:
+        """Per-client uploads whose wire sizes DIFFER (per-client codecs,
+        e.g. the adaptive_codec allocation policy).  ``wire_bytes`` is a
+        sequence of per-client byte counts.
+
+        star: every payload crosses the server link — the sum.
+        tree, aggregatable: one summed payload per level; any node's
+        traffic is bounded by the densest contribution, so the per-node
+        metric bills depth × max.  tree, non-aggregatable: every payload
+        reaches the root — the sum again.  With uniform sizes all three
+        reduce exactly to :meth:`upload`."""
+        sizes = [float(b) for b in wire_bytes]
+        k = len(sizes)
+        if k == 0:
+            return
+        self.up_star_bytes += sum(sizes)
+        if aggregatable:
+            depth = max(1, math.ceil(math.log2(max(k, 2))))
+            self.up_tree_bytes += depth * max(sizes)
+        else:
+            self.up_tree_bytes += sum(sizes)
+
     def scalars(self, n: int) -> None:
         self.scalar_bytes += n * BYTES_F32
 

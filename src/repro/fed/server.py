@@ -6,8 +6,11 @@ name.  Each registered strategy declares its per-round resource footprint
 (a ``RoundPlan``) and supplies client/aggregate/server steps; the driver
 owns everything algorithm-independent:
 
-  * client sampling (optionally through the repro.edge scheduler, fed by
-    the plan's predicted *wire* bytes and FLOPs),
+  * client sampling and per-client resource allocation (optionally
+    through a repro.edge AllocationPolicy, fed by the plan's predicted
+    *wire* bytes and FLOPs — the policy's RoundDecision fixes each
+    selected client's uplink bandwidth share and, optionally, its own
+    upload codec),
   * CommLedger metering, driven once per round from the plan — the
     ledger's actuals equal the plan's prediction by construction, under
     every payload codec,
@@ -77,7 +80,14 @@ class FederatedRun:
                     f"{algorithm!r} supports sync edge simulation only")
             self.edge = EdgeRuntime(fed_cfg.edge, fed_cfg.num_clients,
                                     fed_cfg.seed)
+            if self.edge.policy.needs_summable and not self.plan.summable:
+                raise ValueError(
+                    f"allocation policy {fed_cfg.edge.scheduler!r} emits "
+                    "per-client sparsifying codecs, which only additive "
+                    f"(summable) payloads survive; {algorithm!r} uploads "
+                    "distinct models/components (summable=False)")
         self._edge_est = None
+        self._decision = None           # this round's RoundDecision
         self._flops_cache: dict[int, float] = {}
 
     # ------------------------------------------------------------------
@@ -99,6 +109,32 @@ class FederatedRun:
         return self._flops_cache[k]
 
     # ------------------------------------------------------------------
+    def _wire_fn(self, codec=None) -> tuple[float, float]:
+        """One client's (aggregatable, non-aggregatable) upload wire
+        bytes under a per-client codec override (None = the plan's
+        phase codecs).  This is the single byte authority the allocation
+        policy, the ledger, and the edge clock all consume — plan ==
+        ledger per client, by construction."""
+        agg = nonagg = 0.0
+        for ph in self.plan.phases:
+            if not ph.up_floats:
+                continue
+            wire = (codec or ph.codec).wire_bytes(ph.up_floats)
+            if ph.aggregatable:
+                agg += wire
+            else:
+                nonagg += wire
+        return agg, nonagg
+
+    def _decision_bytes(self) -> tuple[np.ndarray, np.ndarray]:
+        """(total, non-aggregatable) per-client wire bytes aligned with
+        the current decision's selected cohort."""
+        pairs = [self._wire_fn(self._decision.codec_for(i))
+                 for i in self._decision.selected]
+        agg = np.asarray([p[0] for p in pairs])
+        nonagg = np.asarray([p[1] for p in pairs])
+        return agg + nonagg, nonagg
+
     def sample_clients(self) -> list[int]:
         k = max(1, int(self.fcfg.participation * self.fcfg.num_clients))
         eligible = [i for i in range(self.fcfg.num_clients)
@@ -109,23 +145,37 @@ class FederatedRun:
         if self.edge.async_agg is not None:  # don't re-pick in-flight clients
             eligible = [i for i in eligible if i not in self.edge.busy]
         flops = np.asarray([self._plan_flops(i) for i in eligible])
-        selected, est = self.edge.select(
-            k, eligible, self.plan.upload_bytes(), flops)
+        selected, est, decision = self.edge.decide(
+            k, eligible, self._wire_fn, flops,
+            summable=self.plan.summable, codec=self.codec)
         self._edge_est = est
+        self._decision = decision
         return selected
 
-    def _meter_round(self, n_selected: int) -> None:
+    def _meter_round(self, selected: list[int]) -> None:
         """CommLedger metering, generically from the plan: the ledger's
-        actuals are the plan's predictions by construction.  An empty
-        cohort still counts as a round but bills nothing — no uploads, no
-        Gram scalar exchange (the server step is skipped too)."""
+        actuals are the plan's predictions by construction — also under
+        per-client codec overrides from the allocation policy, where
+        each client is billed its own wire size.  An empty cohort still
+        counts as a round but bills nothing — no uploads, no Gram scalar
+        exchange (the server step is skipped too)."""
+        n_selected = len(selected)
         if n_selected == 0:
             self.ledger.end_round()
             return
+        hetero = (self._decision is not None
+                  and self._decision.heterogeneous_codecs)
         for ph in self.plan.phases:
             if ph.down_floats:
                 self.ledger.broadcast(ph.down_floats, n_selected)
-            if ph.up_floats:
+            if not ph.up_floats:
+                continue
+            if hetero:
+                wire = [(self._decision.codec_for(i) or ph.codec)
+                        .wire_bytes(ph.up_floats) for i in selected]
+                self.ledger.upload_per_client(wire,
+                                              aggregatable=ph.aggregatable)
+            else:
                 self.ledger.upload(ph.up_floats, n_selected,
                                    aggregatable=ph.aggregatable,
                                    wire_bytes=ph.wire_up_bytes())
@@ -140,11 +190,12 @@ class FederatedRun:
             # the plan's aggregatable flags say which uploads sum in the
             # network (gradients/FIM/OVA components) and which must reach
             # the root individually (local models); mixed plans (FedDANE)
-            # carve out the non-aggregatable share
+            # carve out the non-aggregatable share.  Bytes are per-client
+            # arrays so heterogeneous codecs cost each uplink correctly.
+            up, nonagg = self._decision_bytes()
             rec = self.edge.finish_round_sync(
-                self._edge_est, self.plan.upload_bytes(),
-                self.plan.downlink_bytes(),
-                nonagg_bytes=self.plan.nonagg_upload_bytes())
+                self._edge_est, up, self.plan.downlink_bytes(),
+                nonagg_bytes=nonagg)
             info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
                         energy_j=rec["energy_j"])
         return info
@@ -164,17 +215,22 @@ class FederatedRun:
         can reject everyone) is recorded as ``cohort=0`` with no ``loss``
         entry and the server step skipped — never an np.mean([]) NaN."""
         selected = self.sample_clients()
-        self._meter_round(len(selected))
+        self._meter_round(selected)
         datas = [self._client_data(i) for i in selected]
         context = self.strategy.round_context(datas, self.rng)
         payloads, weights, losses = [], [], []
         for j, (cid, data) in enumerate(zip(selected, datas)):
             payload, loss = self.strategy.client_step(
                 data, self.rng, None if context is None else context[j])
-            if not self.codec.identity:
+            # the allocation policy may hand this client its own wire
+            # format (adaptive_codec); default is the run codec
+            codec = self.codec
+            if self._decision is not None:
+                codec = self._decision.codec_for(cid) or codec
+            if not codec.identity:
                 self._qkey, sub = jax.random.split(self._qkey)
                 payload, res = self.strategy.compress_payload(
-                    payload, sub, self._ef_residual.get(cid))
+                    payload, sub, self._ef_residual.get(cid), codec=codec)
                 if res is not None:
                     self._ef_residual[cid] = res
             payloads.append(payload)

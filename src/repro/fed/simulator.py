@@ -123,7 +123,16 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
     ``round_step`` itself (``from_strategy`` attaches the strategy's
     codec); ``compress`` exists only to state it explicitly and must
     match — billing a wire format the step does not round-trip raises,
-    so cost and accuracy cannot be paired apart by accident."""
+    so cost and accuracy cannot be paired apart by accident.
+
+    Each round the edge's AllocationPolicy apportions the shared
+    bandwidth budget over the given cohort (``EdgeRuntime.allocate_for``
+    — selection already happened upstream, only the ``allocate`` stage
+    runs), so e.g. ``bandwidth_opt`` shrinks the sync barrier here too.
+    Policies that emit per-client *codecs* are rejected: the vmapped
+    path round-trips every client through the one run codec, and billing
+    wire formats the payloads never saw is the divergence this layer
+    exists to forbid."""
     step_codec = getattr(round_step, "codec", codecs.NONE)
     codec = step_codec if compress is None else codecs.make(compress)
     if codec.spec() != step_codec.spec():
@@ -132,8 +141,11 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
             f"{step_codec.spec()!r} but billing was requested at "
             f"{codec.spec()!r}; build the step with the same codec "
             "(simulator.from_strategy attaches FedConfig.compress)")
-    up_bytes = codec.wire_bytes(2.0 * n_params)
     down_bytes = float(n_params * comm.BYTES_F32)
+
+    def wire_fn(override=None):
+        # grad+FIM payloads are summable: fully aggregatable on the wire
+        return float((override or codec).wire_bytes(2.0 * n_params)), 0.0
 
     def edge_round_step(params, opt_state, cohort_batch, weights,
                         clients: Optional[np.ndarray] = None, key=None):
@@ -163,9 +175,21 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
                 raise ValueError(
                     f"client ids must be in [0, {edge.num_clients}), "
                     f"got range [{cohort.min()}, {cohort.max()}]")
-        edge.channel.sample()
-        est = edge.estimate(cohort, up_bytes, flops_grad_fim(n_params, b))
-        rec = edge.finish_round_sync(est, up_bytes, down_bytes)
+        est, decision = edge.allocate_for(
+            cohort, wire_fn, flops_grad_fim(n_params, b), codec=codec)
+        if decision.heterogeneous_codecs:
+            raise ValueError(
+                f"allocation policy {edge.cfg.scheduler!r} assigns "
+                "per-client upload codecs, but the vmapped cohort path "
+                "round-trips every client through the one run codec — "
+                "use FederatedRun for adaptive per-client wire formats")
+        # duplicate cohort slots (mod fallback) share one subchannel but
+        # carry one payload each — bill every slot
+        uniq, counts = np.unique(cohort, return_counts=True)
+        mult = {int(u): int(c) for u, c in zip(uniq, counts)}
+        up_arr = np.asarray([mult[int(i)] * wire_fn()[0]
+                             for i in decision.selected])
+        rec = edge.finish_round_sync(est, up_arr, down_bytes)
         stats = dict(stats)
         stats.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
                      energy_j=rec["energy_j"])

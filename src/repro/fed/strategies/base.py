@@ -192,14 +192,16 @@ class FedStrategy(abc.ABC):
     def server_step(self, aggregate) -> None:
         """Apply an aggregate to the server model/optimizer state."""
 
-    def compress_payload(self, payload, key, residual=None):
-        """Round-trip the payload through the run's codec (what the
-        server receives).  Returns ``(payload, new_residual)`` — the
-        driver owns the per-client error-feedback residual and threads it
-        back in next round.  Strategies whose payloads need structure-
-        aware handling (e.g. a nonnegative Fisher diagonal, an OVA
-        presence mask that must not be quantized) override this."""
-        return self.codec.roundtrip(payload, key, residual)
+    def compress_payload(self, payload, key, residual=None, codec=None):
+        """Round-trip the payload through ``codec`` (default: the run's
+        codec; an allocation policy may hand a client its own wire
+        format, e.g. adaptive_codec's channel-scheduled top-k ratios).
+        Returns ``(payload, new_residual)`` — the driver owns the
+        per-client error-feedback residual and threads it back in next
+        round.  Strategies whose payloads need structure-aware handling
+        (e.g. a nonnegative Fisher diagonal, an OVA presence mask that
+        must not be quantized) override this."""
+        return (codec or self.codec).roundtrip(payload, key, residual)
 
     # -- evaluation ------------------------------------------------------
     def evaluate(self, x, y) -> float:

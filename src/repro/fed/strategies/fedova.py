@@ -116,11 +116,11 @@ class FedOvaStrategy(FedStrategy):
         return self._local_sgd(comp_c, batches,
                                lr=float(self.fcfg.learning_rate))
 
-    def compress_payload(self, payload, key, residual=None):
+    def compress_payload(self, payload, key, residual=None, codec=None):
         # codec the component stack only: the class-presence mask is
         # metered as scalars and must survive the wire exactly
         comp, mask = payload
-        comp, residual = self.codec.roundtrip(comp, key, residual)
+        comp, residual = (codec or self.codec).roundtrip(comp, key, residual)
         return (comp, mask), residual
 
     def aggregate(self, payloads, weights):

@@ -50,8 +50,8 @@ class FimLbfgsStrategy(FedStrategy):
         g, f, loss = self._grad_fim(self.params, batch)
         return (g, f), float(loss)
 
-    def compress_payload(self, payload, key, residual=None):
-        out, residual = self.codec.roundtrip(payload, key, residual)
+    def compress_payload(self, payload, key, residual=None, codec=None):
+        out, residual = (codec or self.codec).roundtrip(payload, key, residual)
         g, f = out
         # the Fisher diagonal must stay nonnegative through the roundtrip
         return (g, jax.tree.map(jnp.abs, f)), residual

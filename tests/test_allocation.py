@@ -1,0 +1,354 @@
+"""The allocation-policy × strategy matrix (repro.edge.allocation).
+
+Invariants every policy must keep, checked end-to-end through
+``FederatedRun`` for all seven registered strategies:
+
+  * per-round allocated bandwidth sums to ≤ the shared round budget,
+  * every transmitting client holds a strictly positive allocation,
+  * plan == ledger per client — also under per-client heterogeneous
+    codecs (the adaptive_codec policy), where each client is billed its
+    own ``wire_bytes``,
+  * bandwidth-only policies never change WHAT is counted: CommLedger
+    bytes match ``uniform`` exactly at equal cohorts.
+
+Plus the registry surface (drop-in third-party policies, knob
+filtering), the RoundDecision validator, and the vmapped-simulator
+coupling (``with_edge`` allocates over the fixed cohort and rejects
+per-client codec overrides it cannot round-trip).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.edge import (Allocation, AllocationPolicy, ChannelConfig,
+                        DeviceConfig, EdgeConfig, RoundDecision, allocation)
+from repro.fed.server import FederatedRun
+
+MCFG = reduced(FMNIST_CNN)
+ALL_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox", "feddane",
+            "fedova", "fedova_lbfgs"]
+SUMMABLE_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox"]
+BANDWIDTH_POLICIES = ["uniform", "deadline", "energy_threshold",
+                      "capacity_proportional", "bandwidth_opt"]
+
+UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+                       fading="rayleigh", server_rate_bps=50e6)
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+
+
+def _data(n_train=300, n_test=100, noise=0.5, seed=0):
+    return make_classification(MCFG, n_train=n_train, n_test=n_test,
+                               seed=seed, noise=noise)
+
+
+def _run(alg, policy, rounds=2, seed=0, **edge_kw):
+    train, test = _data(seed=seed)
+    edge = EdgeConfig(channel=UPLINK, device=HETERO, scheduler=policy,
+                      deadline_s=5.0, min_clients=2, **edge_kw)
+    fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                     batch_size=32, rounds=rounds, noniid_l=2, seed=seed,
+                     edge=edge)
+    run = FederatedRun(MCFG, fcfg, train, test, alg)
+    run.run(rounds=rounds, eval_every=rounds)
+    return run
+
+
+def _expected_ledger(run):
+    """Recompute the ledger from the decisions + the plan — per client,
+    per phase, under each client's own codec."""
+    star = tree = 0.0
+    for dec in run.edge.decisions:
+        k = len(dec.selected)
+        if k == 0:
+            continue
+        depth = max(1, math.ceil(math.log2(max(k, 2))))
+        for ph in run.plan.phases:
+            if not ph.up_floats:
+                continue
+            wire = [(dec.codec_for(i) or ph.codec).wire_bytes(ph.up_floats)
+                    for i in dec.selected]
+            star += sum(wire)
+            tree += depth * max(wire) if ph.aggregatable else sum(wire)
+    return star, tree
+
+
+MATRIX = ([(a, p) for a in ALL_ALGS for p in BANDWIDTH_POLICIES]
+          + [(a, "adaptive_codec") for a in SUMMABLE_ALGS])
+
+
+@pytest.mark.parametrize("alg,policy", MATRIX)
+def test_allocation_invariants_and_plan_equals_ledger(alg, policy):
+    run = _run(alg, policy)
+    assert len(run.edge.decisions) == 2
+    for dec in run.edge.decisions:
+        # budget: never hand out more than the shared round bandwidth
+        assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9), \
+            (alg, policy)
+        # every transmitting client holds a strictly positive subchannel
+        assert all(a.bandwidth_hz > 0 for a in dec.allocations.values()), \
+            (alg, policy)
+        # selected and excluded are disjoint
+        assert not set(dec.selected) & set(dec.excluded), (alg, policy)
+    star, tree = _expected_ledger(run)
+    assert run.ledger.up_star_bytes == pytest.approx(star), (alg, policy)
+    assert run.ledger.up_tree_bytes == pytest.approx(tree), (alg, policy)
+
+
+@pytest.mark.parametrize("alg", ["feddane", "fedova"])
+def test_adaptive_codec_rejected_for_nonsummable(alg):
+    train, test = _data()
+    edge = EdgeConfig(channel=UPLINK, device=HETERO,
+                      scheduler="adaptive_codec")
+    fcfg = FedConfig(num_clients=8, participation=1.0, rounds=1,
+                     noniid_l=2, seed=0, edge=edge)
+    with pytest.raises(ValueError, match="summable"):
+        FederatedRun(MCFG, fcfg, train, test, alg)
+
+
+def test_bandwidth_opt_beats_uniform_at_equal_bytes():
+    """The acceptance invariant: allocation changes who/when/how-fast,
+    never what is counted — bandwidth_opt must land the same cohorts and
+    the exact same CommLedger bytes as uniform (same seed, same budget),
+    at strictly lower simulated wall time."""
+    uni = _run("fedavg_sgd", "uniform", rounds=3)
+    opt = _run("fedavg_sgd", "bandwidth_opt", rounds=3)
+    for f in ("down_bytes", "up_star_bytes", "up_tree_bytes",
+              "scalar_bytes", "rounds"):
+        assert getattr(uni.ledger, f) == getattr(opt.ledger, f), f
+    assert (opt.edge.summary()["wall_clock_s"]
+            < uni.edge.summary()["wall_clock_s"])
+    # and both spend the full budget
+    for dec in opt.edge.decisions:
+        assert dec.total_bandwidth_hz() == pytest.approx(dec.budget_hz)
+
+
+def test_adaptive_codec_error_feedback_stays_per_client():
+    """Per-client top-k ratios change round to round, but the error-
+    feedback residual follows the true client id — exactly the clients
+    whose uploads were actually sparsified accumulate one.  A scheduled
+    format that would cost >= the dense payload falls back to the base
+    codec, so every override is strictly a wire-byte discount."""
+    run = _run("fedavg_sgd", "adaptive_codec", rounds=2)
+    base_bytes = sum(run._wire_fn(None))
+    sparsified = set()
+    for dec in run.edge.decisions:
+        for i in dec.selected:
+            codec = dec.codec_for(i)
+            if codec is not None:
+                sparsified.add(i)
+                assert sum(run._wire_fn(codec)) < base_bytes
+    # channel heterogeneity guarantees sub-median links got sparse codecs
+    assert sparsified
+    assert set(run._ef_residual) == sparsified
+
+
+def test_bandwidth_budget_knob_scales_round_time():
+    """EdgeConfig.bandwidth_budget_hz is the shared pool: halving it
+    halves every subchannel under the equal split, so uplink-dominated
+    rounds take ~2x longer; bytes stay identical."""
+    wide = _run("fedavg_sgd", "uniform", rounds=2,
+                bandwidth_budget_hz=8 * 2e5)
+    narrow = _run("fedavg_sgd", "uniform", rounds=2,
+                  bandwidth_budget_hz=4 * 2e5)
+    assert narrow.ledger.up_star_bytes == wide.ledger.up_star_bytes
+    assert (narrow.edge.summary()["wall_clock_s"]
+            > wide.edge.summary()["wall_clock_s"])
+    for dec in narrow.edge.decisions:
+        assert dec.budget_hz == pytest.approx(4 * 2e5)
+
+
+# ------------------------------------------------------------- registry
+def test_registry_surface_and_knob_filtering():
+    assert {"uniform", "deadline", "energy_threshold",
+            "capacity_proportional", "bandwidth_opt",
+            "adaptive_codec"} <= set(allocation.names())
+    # make_policy drops knobs a policy does not accept (EdgeConfig passes
+    # every knob it carries unconditionally)
+    pol = allocation.make_policy("deadline", deadline_s=3.0,
+                                 battery_floor_j=1.0, ratio=0.5)
+    assert pol.deadline_s == 3.0
+    pol = allocation.make_policy("adaptive_codec", ratio=0.5,
+                                 deadline_s=3.0)
+    assert pol.ratio == 0.5
+    with pytest.raises(ValueError, match="unknown allocation policy"):
+        allocation.make_policy("waterfilling")
+
+
+def test_third_party_policy_drop_in():
+    """A policy registered from outside the package drives a run end to
+    end through EdgeConfig — the registry mirror of strategies/codecs."""
+    @allocation.register("_test_greedy")
+    class GreedyPolicy(AllocationPolicy):
+        """All budget to the fastest k clients, split by rank."""
+        def select(self, state):
+            order = np.argsort(state.est.time_s)[:state.k]
+            return [int(state.est.clients[i]) for i in order], {}
+
+        def allocate(self, ids, state):
+            share = state.budget_hz / max(len(ids), 1)
+            return {int(i): Allocation(bandwidth_hz=share) for i in ids}
+
+    try:
+        run = _run("fedavg_sgd", "_test_greedy", rounds=1)
+        assert len(run.edge.decisions) == 1
+        dec = run.edge.decisions[0]
+        assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
+        star, tree = _expected_ledger(run)
+        assert run.ledger.up_star_bytes == pytest.approx(star)
+    finally:
+        allocation._REGISTRY.pop("_test_greedy", None)
+
+
+def test_round_decision_validator():
+    with pytest.raises(ValueError, match="non-positive"):
+        RoundDecision({1: Allocation(bandwidth_hz=0.0)},
+                      budget_hz=1e6).validate()
+    with pytest.raises(ValueError, match="exceeds the round budget"):
+        RoundDecision({1: Allocation(2e6), 2: Allocation(2e6)},
+                      budget_hz=3e6).validate()
+    dec = RoundDecision({1: Allocation(1e6, deadline_s=2.0)},
+                        budget_hz=1e6).validate()
+    assert dec.selected == [1] and not dec.heterogeneous_codecs
+
+
+def test_policy_selecting_unknown_id_raises_clear_valueerror():
+    """A third-party policy returning an id outside the eligible set must
+    fail with a named error, not an opaque KeyError from the runtime's
+    position lookup (the for_ids satellite fix, at the runtime layer)."""
+    from repro.edge.runtime import EdgeRuntime
+
+    @allocation.register("_test_stale")
+    class StalePolicy(AllocationPolicy):
+        def select(self, state):
+            return [int(state.est.clients[0]), 99], {}
+
+    try:
+        rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                    scheduler="_test_stale"), 8)
+        with pytest.raises(ValueError, match=r"\[99\] outside the round"):
+            rt.decide(4, np.arange(8), lambda c: (1e5, 0.0), 1e9)
+    finally:
+        allocation._REGISTRY.pop("_test_stale", None)
+
+
+def test_allocate_for_prices_duplicate_cohort_slots():
+    """The with_edge mod fallback can repeat a fleet entry: the device
+    gets ONE subchannel but carries one payload per slot — the whole
+    budget is still granted and nothing is silently dropped."""
+    from repro.edge.runtime import EdgeRuntime
+
+    chan = ChannelConfig(bandwidth_hz=2e5, fading="none", snr_db_std=0.0)
+    flat = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=0.0)
+    wire = (lambda c: (1e5, 0.0))
+
+    def alloc(cohort):
+        rt = EdgeRuntime(EdgeConfig(channel=chan, device=flat,
+                                    bandwidth_budget_hz=8e5), 4, seed=0)
+        return rt.allocate_for(cohort, wire, 1e9)
+
+    est1, dec1 = alloc([0, 1, 2, 3])
+    est2, dec2 = alloc([0, 1, 2, 3, 0, 1, 2, 3])
+    for dec in (dec1, dec2):
+        assert sorted(dec.selected) == [0, 1, 2, 3]
+        # the full pool is granted either way (the bug: duplicates
+        # collapsed, splitting the budget over phantom slots)
+        assert dec.total_bandwidth_hz() == pytest.approx(8e5)
+    # same budget, same subchannels, twice the payloads -> uplink share
+    # of the round doubles (compute share is per-device and also doubles:
+    # the device runs both slots' local work)
+    np.testing.assert_allclose(est2.time_s, 2 * est1.time_s)
+    # and the optimizer sees the multiplicity: a device carrying two
+    # payloads (and both slots' compute) needs a wider subchannel than
+    # its single-payload peers to hit the same barrier
+    rt = EdgeRuntime(EdgeConfig(channel=chan, device=flat,
+                                scheduler="bandwidth_opt",
+                                bandwidth_budget_hz=8e5), 4, seed=0)
+    est3, dec3 = rt.allocate_for([0, 1, 2, 3, 0], wire, 1e9)
+    assert dec3.allocations[0].bandwidth_hz > dec3.allocations[1].bandwidth_hz
+    # the optimum still equalizes finish times across devices
+    assert est3.time_s.max() - est3.time_s.min() < 1e-3 * est3.time_s.max()
+
+
+def test_async_runtime_through_allocate_for_does_not_starve():
+    """Spectrum holds belong to the buffered-async dispatch path only;
+    repeated allocate_for rounds (with_edge) on an async-configured
+    runtime must keep the full budget available."""
+    from repro.edge.runtime import EdgeRuntime
+
+    rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                mode="async", buffer_size=2), 8)
+    wire = (lambda c: (1e5, 0.0))
+    _, dec1 = rt.allocate_for(np.arange(4), wire, 1e9)
+    _, dec2 = rt.allocate_for(np.arange(4), wire, 1e9)  # used to raise
+    assert dec2.budget_hz == pytest.approx(dec1.budget_hz)
+    assert dec2.total_bandwidth_hz() > 0
+
+
+def test_async_in_flight_uploads_hold_their_spectrum():
+    """The driver path: a straggler keeps its granted subchannel until
+    its upload lands, so the next dispatch is carved from what is free —
+    the pool is never oversubscribed across overlapping rounds."""
+    run = _run("fedavg_sgd", "uniform", rounds=3, mode="async",
+               buffer_size=3)
+    budgets = [d.budget_hz for d in run.edge.decisions]
+    for dec in run.edge.decisions:
+        assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
+    # once stragglers are in flight, later rounds see a smaller pool
+    assert min(budgets[1:]) < budgets[0]
+    # and the holds match the clients actually still busy
+    assert set(run.edge._held_hz) == run.edge.busy
+
+
+# ----------------------------------------------- vmapped simulator coupling
+def test_with_edge_allocates_over_the_fixed_cohort():
+    """simulator.with_edge runs only the policy's allocate stage over the
+    caller's cohort: bandwidth_opt shrinks the barrier versus uniform at
+    identical budget, cohort, and billed bytes."""
+    import jax.numpy as jnp
+    from repro.edge.runtime import EdgeRuntime
+    from repro.fed import simulator, strategies
+
+    train, _ = _data()
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(train.x), size=(6, 32))
+    cohort = {"x": jnp.asarray(train.x[idx]), "y": jnp.asarray(train.y[idx])}
+    walls = {}
+    for policy in ("uniform", "bandwidth_opt"):
+        s = strategies.get("fim_lbfgs")(MCFG, FedConfig(num_clients=8,
+                                                        seed=0), 10)
+        step = simulator.from_strategy(s)
+        edge = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                      scheduler=policy), 8)
+        estep = simulator.with_edge(step, edge, s.n_params())
+        _, _, stats = estep(s.params, s.opt_state, cohort, jnp.ones(6),
+                            clients=np.arange(6))
+        walls[policy] = stats["wall_s"]
+        dec = edge.decisions[-1]
+        assert sorted(dec.selected) == list(range(6))
+        assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
+    assert walls["bandwidth_opt"] < walls["uniform"]
+
+
+def test_with_edge_rejects_per_client_codecs():
+    """Billing per-client wire formats the vmapped path never round-trips
+    would pair compressed cost with uncompressed accuracy — refused."""
+    import jax.numpy as jnp
+    from repro.edge.runtime import EdgeRuntime
+    from repro.fed import simulator, strategies
+
+    train, _ = _data()
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(train.x), size=(4, 32))
+    cohort = {"x": jnp.asarray(train.x[idx]), "y": jnp.asarray(train.y[idx])}
+    s = strategies.get("fim_lbfgs")(MCFG, FedConfig(num_clients=8, seed=0), 10)
+    step = simulator.from_strategy(s)
+    edge = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                  scheduler="adaptive_codec"), 8)
+    estep = simulator.with_edge(step, edge, s.n_params())
+    with pytest.raises(ValueError, match="per-client upload codecs"):
+        estep(s.params, s.opt_state, cohort, jnp.ones(4),
+              clients=np.arange(4))

@@ -1,14 +1,14 @@
 """Unit + integration tests for repro.edge (the resource-constrained
-wireless runtime): channel/device cost monotonicity, scheduling policies,
+wireless runtime): channel/device cost monotonicity, allocation policies,
 staleness weighting, the event clock, and sync-vs-async end-to-end."""
 import numpy as np
 import pytest
 
-from repro.edge import (AsyncAggregator, CapacityProportionalScheduler, Channel,
-                        ChannelConfig, ClientEstimate, DeadlineScheduler,
+from repro.edge import (AsyncAggregator, CapacityProportionalPolicy, Channel,
+                        ChannelConfig, ClientEstimate, DeadlinePolicy,
                         DeviceConfig, DeviceFleet, EdgeConfig,
-                        EnergyThresholdScheduler, EventClock,
-                        UniformScheduler, staleness_weights)
+                        EnergyThresholdPolicy, EventClock, RoundState,
+                        UniformPolicy, staleness_weights)
 from repro.edge.device import flops_grad_fim, flops_local_sgd
 
 
@@ -92,7 +92,7 @@ def test_fleet_heterogeneity():
     assert np.ptp(homog.flops_per_s) == 0.0
 
 
-# -------------------------------------------------------------- scheduler
+# ----------------------------------------------------- allocation policies
 def _est(times, energies=None, batteries=None):
     n = len(times)
     return ClientEstimate(
@@ -102,42 +102,142 @@ def _est(times, energies=None, batteries=None):
                              else [np.inf] * n))
 
 
-def test_uniform_scheduler_selects_k():
-    sel, drop = UniformScheduler().select(3, _est([1.0] * 10),
-                                          np.random.default_rng(0))
-    assert len(sel) == 3 and drop == []
+def _state(times, energies=None, batteries=None, k=None, budget_hz=8e5,
+           t_comp=None, spectral_eff=None, up_bytes=0.0, summable=True,
+           seed=0):
+    n = len(times)
+
+    def wire_fn(codec=None):
+        # base format: dense float32 (up_bytes); overrides bill their own
+        if codec is None:
+            return float(up_bytes), 0.0
+        return float(codec.wire_bytes(up_bytes / 4.0)), 0.0
+
+    return RoundState(
+        k=n if k is None else k,
+        est=_est(times, energies, batteries),
+        t_comp_s=np.asarray(t_comp if t_comp is not None else [0.0] * n,
+                            dtype=float),
+        spectral_eff=np.asarray(spectral_eff if spectral_eff is not None
+                                else [1.0] * n, dtype=float),
+        budget_hz=budget_hz, rng=np.random.default_rng(seed),
+        summable=summable, wire_fn=wire_fn)
 
 
-def test_deadline_scheduler_drops_stragglers():
-    est = _est([0.1, 0.2, 10.0, 0.3, 20.0])
-    sel, drop = DeadlineScheduler(deadline_s=1.0).select(
-        5, est, np.random.default_rng(0))
-    assert sorted(sel) == [0, 1, 3]
-    assert sorted(drop) == [2, 4]
+def test_uniform_policy_selects_k_and_splits_budget():
+    dec = UniformPolicy().decide(_state([1.0] * 10, k=3, budget_hz=9e5))
+    assert len(dec.selected) == 3 and dec.excluded == {}
+    np.testing.assert_allclose(dec.bandwidth(), 3e5)
+    assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
 
 
-def test_deadline_scheduler_keeps_min_clients():
-    est = _est([5.0, 9.0, 7.0])
-    sel, drop = DeadlineScheduler(deadline_s=1.0, min_clients=2).select(
-        3, est, np.random.default_rng(0))
-    assert sorted(sel) == [0, 2]  # the two fastest despite missing deadline
+def test_deadline_policy_drops_stragglers_with_reasons():
+    dec = DeadlinePolicy(deadline_s=1.0).decide(
+        _state([0.1, 0.2, 10.0, 0.3, 20.0]))
+    assert sorted(dec.selected) == [0, 1, 3]
+    assert sorted(dec.excluded) == [2, 4]
+    assert all("deadline" in why for why in dec.excluded.values())
+    # survivors inherit the dropped clients' budget share and the deadline
+    np.testing.assert_allclose(dec.bandwidth(), dec.budget_hz / 3)
+    assert all(a.deadline_s == 1.0 for a in dec.allocations.values())
+
+
+def test_deadline_policy_keeps_min_clients():
+    dec = DeadlinePolicy(deadline_s=1.0, min_clients=2).decide(
+        _state([5.0, 9.0, 7.0]))
+    assert sorted(dec.selected) == [0, 2]  # two fastest despite the deadline
 
 
 def test_energy_threshold_excludes_depleted_and_expensive():
-    est = _est([1.0] * 4, energies=[0.5, 0.5, 5.0, 0.5],
-               batteries=[10.0, 0.05, 10.0, 10.0])
-    sched = EnergyThresholdScheduler(battery_floor_j=0.1, round_budget_j=2.0)
-    sel, excl = sched.select(4, est, np.random.default_rng(0))
-    assert sorted(sel) == [0, 3]
-    assert sorted(excl) == [1, 2]  # 1 depleted, 2 over budget
+    dec = EnergyThresholdPolicy(battery_floor_j=0.1, round_budget_j=2.0
+                                ).decide(_state([1.0] * 4,
+                                                energies=[0.5, 0.5, 5.0, 0.5],
+                                                batteries=[10.0, 0.05,
+                                                           10.0, 10.0]))
+    assert sorted(dec.selected) == [0, 3]
+    assert sorted(dec.excluded) == [1, 2]  # 1 depleted, 2 over budget
+    assert "floor" in dec.excluded[1] and "budget" in dec.excluded[2]
 
 
 def test_capacity_proportional_prefers_fast_clients():
-    est = _est([0.01] + [10.0] * 9)
-    rng = np.random.default_rng(0)
-    hits = sum(0 in CapacityProportionalScheduler().select(1, est, rng)[0]
-               for _ in range(50))
+    hits = 0
+    for trial in range(50):
+        dec = CapacityProportionalPolicy().decide(
+            _state([0.01] + [10.0] * 9, k=1, seed=trial))
+        hits += 0 in dec.selected
     assert hits > 45  # fast client ~1000x more likely than any slow one
+
+
+def test_for_ids_unknown_id_raises_clear_valueerror():
+    """Satellite regression: asking for an id outside the eligible set
+    used to surface as an opaque KeyError from the position lookup."""
+    est = _est([1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="client id 7"):
+        est.for_ids([0, 7])
+
+
+def test_legacy_scheduler_names_still_work():
+    """The make_scheduler-era surface: old names and classes resolve to
+    the uniform-split allocation policies."""
+    from repro.edge import (CapacityProportionalScheduler, DeadlineScheduler,
+                            EnergyThresholdScheduler, UniformScheduler,
+                            make_scheduler)
+
+    assert UniformScheduler is UniformPolicy
+    assert DeadlineScheduler is DeadlinePolicy
+    assert EnergyThresholdScheduler is EnergyThresholdPolicy
+    assert CapacityProportionalScheduler is CapacityProportionalPolicy
+    sched = make_scheduler("deadline", deadline_s=2.0, min_clients=3)
+    assert isinstance(sched, DeadlinePolicy)
+    assert sched.deadline_s == 2.0 and sched.min_clients == 3
+    with pytest.raises(ValueError, match="unknown allocation policy"):
+        make_scheduler("round_robin")
+
+
+def test_bandwidth_opt_minimizes_the_sync_barrier():
+    """The arXiv:1910.13067 convex program: under heterogeneous compute
+    times the bisection allocation strictly beats the equal split's
+    barrier max_k (t_comp,k + bits/(s_k W_k)) at the same total budget."""
+    from repro.edge import BandwidthOptPolicy
+
+    bits = 8.0 * 1e5
+    state = _state([1.0] * 6, t_comp=[0.1, 0.4, 0.9, 0.2, 0.6, 0.05],
+                   spectral_eff=[2.0, 1.0, 0.5, 3.0, 1.5, 4.0],
+                   up_bytes=1e5, budget_hz=6e5)
+    dec = BandwidthOptPolicy().decide(state)
+    assert sorted(dec.selected) == list(range(6))
+    w = dec.bandwidth(range(6))
+    assert (w > 0).all()
+    assert dec.total_bandwidth_hz() == pytest.approx(6e5)
+    s = np.asarray([2.0, 1.0, 0.5, 3.0, 1.5, 4.0])
+    tc = np.asarray([0.1, 0.4, 0.9, 0.2, 0.6, 0.05])
+    t_opt = tc + bits / (s * w)
+    t_uni = tc + bits / (s * 1e5)
+    assert t_opt.max() < t_uni.max()
+    # the optimum equalizes finish times (within bisection tolerance)
+    assert t_opt.max() - t_opt.min() < 1e-3 * t_opt.max()
+
+
+def test_adaptive_codec_schedules_ratio_from_rate():
+    from repro.edge import AdaptiveCodecPolicy
+
+    pol = AdaptiveCodecPolicy(ratio=0.25, ratio_floor=0.05)
+    dec = pol.decide(_state([1.0] * 5,
+                            spectral_eff=[4.0, 2.0, 1.0, 0.25, 0.01],
+                            up_bytes=1e5, budget_hz=5e5))
+    # the two fastest links schedule ratios 1.0 / 0.5, whose 8 B/element
+    # top-k wire format costs >= the dense 4 B/element payload — the
+    # dominated format falls back to the base codec (sparsifying is only
+    # ever a discount)
+    assert dec.codec_for(0) is None and dec.codec_for(1) is None
+    ratios = {i: dec.codec_for(i).ratio for i in (2, 3, 4)}
+    assert ratios[2] == pytest.approx(0.25 * 1.0 / 1.0)  # median rate
+    assert ratios[2] > ratios[3] > ratios[4]  # slower links, sparser uploads
+    assert ratios[4] == 0.05  # the deep-fade client hits the floor
+    n_floats = 1e5 / 4.0
+    assert all(dec.codec_for(i).wire_bytes(n_floats) < 1e5 for i in (2, 3, 4))
+    with pytest.raises(ValueError, match="summable"):
+        pol.decide(_state([1.0] * 5, up_bytes=1e5, summable=False))
 
 
 # -------------------------------------------------------- async staleness
