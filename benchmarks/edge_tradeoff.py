@@ -27,6 +27,14 @@ split at EQUAL total bandwidth.  Bytes are identical by construction —
 allocation changes who/when/how-fast, never what is counted — so the
 whole win shows up as wall time.
 
+Part E — energy-aware allocation: ``energy_opt`` (minimize Σ_k E_k
+subject to every client finishing within the deadline — the dual of
+bandwidth_opt) vs uniform vs bandwidth_opt at equal budget and a
+non-binding deadline, so all three land the same cohorts, the same
+bytes, and the same accuracy per round on the surviving cohort — the
+whole win is Σ joules, asserted strictly below uniform (and never above
+bandwidth_opt).
+
     PYTHONPATH=src python -m benchmarks.run --only edge
 """
 from __future__ import annotations
@@ -156,7 +164,10 @@ def run(quick: bool = True):
 
     # ---- Part D: bandwidth allocation at equal total budget ------------
     alloc_rows = run_bandwidth_sweep(mcfg, train, test, quick)
-    return rows, sched_rows, codec_rows, alloc_rows
+
+    # ---- Part E: energy-aware allocation under a deadline --------------
+    energy_rows = run_energy_sweep(mcfg, train, test, quick)
+    return rows, sched_rows, codec_rows, alloc_rows, energy_rows
 
 
 def run_codec_grid(mcfg, train, test, quick: bool = True):
@@ -258,6 +269,65 @@ def run_bandwidth_sweep(mcfg, train, test, quick: bool = True):
     emit(alloc_rows, ["scheme", "policy", "budget_MHz", "sim_s_per_round",
                       "J_per_round", "uplink_MB_total"], "edge_bandwidth_opt")
     return alloc_rows
+
+
+def run_energy_sweep(mcfg, train, test, quick: bool = True):
+    """Part E: ``energy_opt`` vs uniform vs ``bandwidth_opt`` at equal
+    total bandwidth and a loose (non-binding) deadline.  All three are
+    bandwidth-only policies over the same uniform cohort at the same
+    seed, so CommLedger bytes and accuracy-per-round are identical on
+    the surviving cohort (nobody is excluded or dropped) — the KKT
+    allocation W_k = max(W_min,k, √c_k/λ) spends the same budget where
+    it buys the most air-time reduction, so Σ joules is the constrained
+    minimum: strictly below the uniform split whenever the per-client
+    costs c_k = bits/s_k are heterogeneous, and never above the
+    barrier-minimizing bandwidth_opt point."""
+    rounds = 3 if quick else 8
+    algs = ["fedavg_sgd"] + ([] if quick else ["fim_lbfgs"])
+    channel = ChannelConfig(topology="star", **{**UPLINK,
+                                                "server_rate_bps": 50e6})
+    energy_rows = []
+    for alg in algs:
+        led, joules, acc = {}, {}, {}
+        for policy in ("uniform", "bandwidth_opt", "energy_opt"):
+            edge = EdgeConfig(channel=channel, device=HETERO_FLEET,
+                              scheduler=policy, deadline_s=1e4,
+                              min_clients=1)
+            fcfg = FedConfig(num_clients=20, participation=0.5,
+                             local_epochs=1, batch_size=10_000,
+                             rounds=rounds, noniid_l=3, learning_rate=0.05,
+                             seed=0, edge=edge)
+            run_ = FederatedRun(mcfg, fcfg, train, test, alg)
+            hist = run_.run(rounds=rounds, eval_every=rounds)
+            s = run_.edge.summary()
+            assert s["deadline_dropped_total"] == 0 and \
+                all(not d.excluded for d in run_.edge.decisions), \
+                (alg, policy, "the deadline must not bind in Part E")
+            led[policy] = run_.ledger.up_star_bytes
+            joules[policy] = s["energy_j"]
+            acc[policy] = hist[-1].get("accuracy", float("nan"))
+            energy_rows.append([alg, policy,
+                                round(s["energy_j"] / rounds, 2),
+                                round(s["wall_clock_s"] / rounds, 2),
+                                round(run_.ledger.up_star_bytes / 1e6, 3),
+                                round(acc[policy], 3)])
+        # equal bytes + equal accuracy on the surviving cohort ...
+        assert led["energy_opt"] == led["uniform"] == led["bandwidth_opt"], \
+            (alg, led)
+        assert acc["energy_opt"] == acc["uniform"], (alg, acc)
+        # ... and the acceptance invariant: strictly fewer joules
+        assert joules["energy_opt"] < joules["uniform"], (alg, joules)
+        assert joules["energy_opt"] <= joules["bandwidth_opt"] * (1 + 1e-9), \
+            (alg, joules)
+        print(f"[edge E] {alg}: energy_opt {joules['energy_opt']:.1f}J vs "
+              f"uniform {joules['uniform']:.1f}J vs bandwidth_opt "
+              f"{joules['bandwidth_opt']:.1f}J for {rounds} rounds at equal "
+              f"bytes/accuracy -> "
+              f"x{joules['uniform'] / joules['energy_opt']:.2f} less energy")
+    emit(energy_rows, ["scheme", "policy", "J_per_round", "sim_s_per_round",
+                       "uplink_MB_total", f"acc@r{rounds}"],
+         "edge_energy_opt")
+    return energy_rows
 
 
 if __name__ == "__main__":

@@ -17,13 +17,17 @@ under the existing federated loop, converting the byte counts the
                     selected cohort — uniform (the paper's), deadline
                     straggler dropping, energy-threshold exclusion
                     (arXiv:2104.05509), capacity-proportional selection
-                    and the bandwidth_opt barrier-minimizing convex
-                    allocation (arXiv:1910.13067), channel-adaptive
+                    the bandwidth_opt barrier-minimizing convex
+                    allocation and its dual energy_opt (minimize Σ E_k
+                    under a deadline, arXiv:1910.13067), channel-adaptive
                     top-k codecs;
   * scheduler.py  — back-compat shim for the PR-1 Scheduler names;
   * async_agg.py  — buffered asynchronous aggregation with
                     staleness-discounted weights (FedBuff-style);
-  * events.py     — event-driven simulation clock;
+  * events.py     — event-driven simulation clock + the deadline verdict
+                    (enforce_deadlines: the runtime contract behind
+                    Allocation.deadline_s — late clients are cut off at
+                    the barrier, partial uploads billed but discarded);
   * runtime.py    — EdgeConfig + EdgeRuntime gluing the above under
                     ``FederatedRun`` and the vmapped simulator cohort path.
 
@@ -34,13 +38,15 @@ ground truth); per-client codecs change bytes only through their
 from repro.edge.allocation import (Allocation, AllocationPolicy,
                                    AdaptiveCodecPolicy, BandwidthOptPolicy,
                                    CapacityProportionalPolicy, ClientEstimate,
-                                   DeadlinePolicy, EnergyThresholdPolicy,
+                                   DeadlinePolicy, EnergyOptPolicy,
+                                   EnergyThresholdPolicy,
                                    RoundDecision, RoundState, UniformPolicy,
                                    make_policy)
 from repro.edge.async_agg import AsyncAggregator, staleness_weights
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet, flops_grad_fim, flops_local_sgd
-from repro.edge.events import Event, EventClock
+from repro.edge.events import (DeadlineVerdict, Event, EventClock,
+                               enforce_deadlines)
 from repro.edge.runtime import EdgeConfig, EdgeRuntime
 from repro.edge.scheduler import (CapacityProportionalScheduler,
                                   DeadlineScheduler, EnergyThresholdScheduler,
@@ -48,13 +54,14 @@ from repro.edge.scheduler import (CapacityProportionalScheduler,
 
 __all__ = [
     "Allocation", "AllocationPolicy", "RoundState", "RoundDecision",
-    "UniformPolicy", "DeadlinePolicy", "EnergyThresholdPolicy",
+    "UniformPolicy", "DeadlinePolicy", "EnergyOptPolicy",
+    "EnergyThresholdPolicy",
     "CapacityProportionalPolicy", "BandwidthOptPolicy", "AdaptiveCodecPolicy",
     "make_policy",
     "AsyncAggregator", "staleness_weights",
     "Channel", "ChannelConfig",
     "DeviceConfig", "DeviceFleet", "flops_grad_fim", "flops_local_sgd",
-    "Event", "EventClock",
+    "DeadlineVerdict", "Event", "EventClock", "enforce_deadlines",
     "EdgeConfig", "EdgeRuntime",
     "ClientEstimate",
     # legacy aliases (see edge/scheduler.py)

@@ -28,6 +28,13 @@ Policies (register your own with :func:`register`):
                             barrier max_k t_k subject to Σ_k W_k ≤ budget
                             by bisection on the arXiv:1910.13067 capacity
                             form t_k = t_comp,k + bits / (W_k·log2(1+γ_k)).
+  * energy_opt            — the dual: minimize Σ_k E_k subject to every
+                            selected client finishing within the round
+                            deadline (and Σ_k W_k ≤ budget), by bisection
+                            on the same capacity form; feasibility-aware
+                            (clients that cannot meet the deadline at any
+                            width within budget are excluded, with
+                            reasons).
   * adaptive_codec        — uniform cohort + equal split, but each
                             client's top-k upload ratio is scheduled from
                             its sampled channel rate (fast links send
@@ -85,7 +92,10 @@ class Allocation:
     """One selected client's share of the round: an uplink subchannel
     width drawn from the shared budget, an optional per-client upload
     codec (None = the plan's / run's codec), and the finish deadline the
-    policy holds it to (informational; inf = none)."""
+    policy holds it to — a *runtime contract*: a client whose realized
+    finish (compute + uplink at this granted width) exceeds it is cut
+    off at the barrier, its upload discarded and only the bytes on the
+    air before the cutoff billed (inf = no deadline)."""
     bandwidth_hz: float
     codec: Any = None              # Optional[repro.fed.codecs.PayloadCodec]
     deadline_s: float = float("inf")
@@ -134,14 +144,26 @@ class RoundState:
 @dataclass
 class RoundDecision:
     """A policy's answer: who transmits with how much of the budget (and
-    in which wire format), and who was excluded, with the reason."""
+    in which wire format), and who was excluded, with the reason.
+
+    ``dropped`` is filled by the RUNTIME, not the policy: per allocated
+    client that busted its granted deadline at the barrier, the reason it
+    was cut off (``excluded`` is the a-priori exclusion, ``dropped`` the
+    a-posteriori enforcement)."""
     allocations: dict[int, Allocation] = field(default_factory=dict)
     excluded: dict[int, str] = field(default_factory=dict)
     budget_hz: float = float("inf")
+    dropped: dict[int, str] = field(default_factory=dict)
 
     @property
     def selected(self) -> list[int]:
         return list(self.allocations)
+
+    @property
+    def survivors(self) -> list[int]:
+        """Allocated clients whose uploads actually landed (selected
+        minus the runtime's deadline drops)."""
+        return [i for i in self.allocations if i not in self.dropped]
 
     @property
     def heterogeneous_codecs(self) -> bool:
@@ -231,7 +253,16 @@ class DeadlinePolicy(AllocationPolicy):
     ``deadline_s``.  Keeps at least ``min_clients`` (the fastest) so a
     tight deadline can never stall training entirely.  Survivors share
     the full budget equally, so dropping stragglers also widens everyone
-    else's subchannel."""
+    else's subchannel.
+
+    Deadline grants (what the runtime enforces): an admitted client is
+    granted ``deadline_s``; since admission predicts under the *nominal*
+    equal split and the granted width is at least nominal, an admitted
+    client's realized finish never exceeds its prediction — under zero
+    channel noise it is never dropped at the barrier.  A client kept
+    only by the ``min_clients`` floor (predicted past the deadline) is
+    granted *no* deadline (inf): the policy insists on its progress, so
+    the runtime must not cut it off."""
     name = "deadline"
 
     def __init__(self, deadline_s: float, min_clients: int = 1):
@@ -252,9 +283,15 @@ class DeadlinePolicy(AllocationPolicy):
         return selected, excluded
 
     def allocate(self, ids, state):
-        return {i: Allocation(bandwidth_hz=a.bandwidth_hz,
-                              deadline_s=self.deadline_s)
-                for i, a in super().allocate(ids, state).items()}
+        base = super().allocate(ids, state)
+        if not base:
+            return base
+        pred = state.est.for_ids(list(base)).time_s
+        return {i: Allocation(
+                    bandwidth_hz=a.bandwidth_hz,
+                    deadline_s=(self.deadline_s if t <= self.deadline_s
+                                else float("inf")))
+                for (i, a), t in zip(base.items(), pred)}
 
 
 class EnergyThresholdPolicy(AllocationPolicy):
@@ -373,6 +410,146 @@ class BandwidthOptPolicy(AllocationPolicy):
                 for i, wk in zip(ids, w)}
 
 
+class EnergyOptPolicy(AllocationPolicy):
+    """Minimize the cohort's total energy Σ_k E_k subject to every
+    selected client finishing within ``deadline_s`` — the dual of
+    ``bandwidth_opt`` (which minimizes the barrier subject to the
+    budget; here the deadline is the constraint and energy the
+    objective), following the resource-allocation formulation of
+    arXiv:1910.13067.
+
+    With E_k = e_comp,k + P_tx · t_up,k and t_up,k = c_k / W_k on the
+    capacity form (c_k = bits_k / s_k, s_k = log2(1+γ_k) this round's
+    spectral efficiency), compute energy is width-independent, so the
+    problem is  min Σ_k c_k / W_k  s.t.  Σ_k W_k ≤ budget  and
+    W_k ≥ W_min,k = c_k / (deadline − t_comp,k)  (the narrowest
+    subchannel that still meets the deadline).  The KKT point is
+    W_k = max(W_min,k, √c_k / λ) with λ pinned by the budget — found by
+    per-client bisection on λ; the final bracket's slack is scaled back
+    pro rata (scaling up never violates a W_min), so the full budget is
+    in the air and Σ energy is the constrained minimum — strictly below
+    the uniform split whenever the c_k are heterogeneous (Cauchy–
+    Schwarz).
+
+    Feasibility-aware selection: a uniform proposal, then clients whose
+    compute alone busts the deadline (no width can save them) and, in
+    ascending-W_min order, clients whose minimal widths no longer fit
+    the remaining budget are excluded with reasons.  If fewer than
+    ``min_clients`` are feasible, the cheapest remaining clients are
+    force-kept at (at least) the equal-split width; the deadline grant
+    is re-derived from the widths actually handed out — a kept client
+    whose width cannot guarantee the deadline is granted none (inf): the
+    policy insists on its progress, so the runtime must not cut it
+    off."""
+    name = "energy_opt"
+
+    def __init__(self, deadline_s: float, min_clients: int = 1,
+                 iters: int = 64):
+        self.deadline_s = float(deadline_s)
+        self.min_clients = int(min_clients)
+        self.iters = int(iters)
+
+    def _capacity(self, ids, state):
+        """Per-client (c_k, t_comp,k, W_min,k) on the capacity form;
+        W_min is inf where no width meets the deadline."""
+        pos = {int(c): i for i, c in enumerate(state.est.clients)}
+        sel = np.asarray([pos[int(i)] for i in ids], dtype=int)
+        s = np.maximum(state.spectral_eff[sel], 1e-9)
+        tc = np.asarray(state.t_comp_s[sel], dtype=float)
+        c = state.up_bits() * state.mult()[sel] / s   # needed W·t_up (Hz·s)
+        gap = self.deadline_s - tc
+        w_min = np.where(gap > 0.0, c / np.maximum(gap, 1e-300), np.inf)
+        w_min = np.where((c <= 0.0) & (gap > 0.0), 0.0, w_min)
+        return c, tc, w_min
+
+    def _feasible(self, w_min, tc, budget):
+        """Greedy ascending-W_min packing into the budget (deterministic:
+        ties broken by compute time) — the shared feasibility rule select
+        and allocate both apply, so they can never disagree."""
+        feas = np.zeros(len(w_min), dtype=bool)
+        used = 0.0
+        for j in np.lexsort((tc, w_min)):
+            if np.isfinite(w_min[j]) and used + w_min[j] <= budget * (1 + 1e-12):
+                feas[j] = True
+                used += w_min[j]
+        return feas
+
+    def select(self, state):
+        ids = self._uniform_ids(state)
+        if not ids:
+            return ids, {}
+        c, tc, w_min = self._capacity(ids, state)
+        budget = float(state.budget_hz)
+        feas = self._feasible(w_min, tc, budget)
+        order = np.lexsort((tc, w_min))
+        keep = [j for j in order if feas[j]]
+        forced = [j for j in order if not feas[j]][:max(
+            0, self.min_clients - len(keep))]
+        kept = set(keep) | set(forced)
+        free = budget - float(w_min[feas].sum())
+        excluded = {}
+        for j in range(len(ids)):
+            if j in kept:
+                continue
+            if not np.isfinite(w_min[j]):
+                excluded[int(ids[j])] = (
+                    f"compute alone takes {tc[j]:.3g}s ≥ deadline "
+                    f"{self.deadline_s:g}s — infeasible at any bandwidth")
+            else:
+                excluded[int(ids[j])] = (
+                    f"needs ≥ {w_min[j]:.3g} Hz to finish by "
+                    f"{self.deadline_s:g}s but only {max(free, 0.0):.3g} Hz "
+                    f"of the {budget:.3g} Hz budget remains")
+        return [int(ids[j]) for j in sorted(kept)], excluded
+
+    def allocate(self, ids, state):
+        ids = [int(i) for i in ids]
+        if not ids:
+            return {}
+        c, tc, w_min = self._capacity(ids, state)
+        budget = float(state.budget_hz)
+        feas = self._feasible(w_min, tc, budget)
+        # floors: a feasible client holds its minimal deadline-meeting
+        # width; a force-kept (infeasible) client holds the equal-split
+        # share, like DeadlinePolicy's keeps — never a vanishing sliver
+        # of bisection slack (an inf-deadline client on a ~0 Hz channel
+        # would blow the barrier and Σ energy unboundedly).  If the
+        # combined floors overflow the budget the guarantees are jointly
+        # unsatisfiable — everyone shrinks pro rata and the deadline
+        # grant below re-derives from the widths actually handed out.
+        w_floor = np.where(feas, w_min, budget / len(ids))
+        total_floor = float(w_floor.sum())
+        if total_floor > budget:
+            w_floor = w_floor * (budget / total_floor)
+        sq = np.sqrt(np.maximum(c, 0.0))
+        if sq.sum() <= 0.0:                    # nothing to upload
+            w = np.maximum(w_floor, budget / len(ids))
+        else:
+            lo, hi = 0.0, budget / sq.sum()
+            for _ in range(self.iters):
+                mid = 0.5 * (lo + hi)
+                if float(np.maximum(w_floor, mid * sq).sum()) <= budget:
+                    lo = mid
+                else:
+                    hi = mid
+            w = np.maximum(w_floor, lo * sq)
+        tot = float(w.sum())
+        if tot <= 0.0:
+            w = np.full(len(ids), budget / len(ids))
+        else:
+            w = w * (budget / tot)             # hand back the bracket slack
+        # grant the deadline iff the width actually handed out still
+        # guarantees it (W ≥ W_min) — a force-kept client whose equal
+        # share happens to meet the deadline earns the grant, one whose
+        # floor was shrunk below W_min loses it (inf: runtime must not
+        # cut off a client the policy could not provision)
+        ok = w >= w_min * (1.0 - 1e-9)
+        return {i: Allocation(
+                    bandwidth_hz=float(wk),
+                    deadline_s=(self.deadline_s if k else float("inf")))
+                for i, wk, k in zip(ids, w, ok)}
+
+
 class AdaptiveCodecPolicy(AllocationPolicy):
     """Uniform cohort + equal split, but each client's top-k upload ratio
     is scheduled from its sampled channel rate: a client whose allocated
@@ -479,4 +656,5 @@ register("deadline", DeadlinePolicy)
 register("energy_threshold", EnergyThresholdPolicy)
 register("capacity_proportional", CapacityProportionalPolicy)
 register("bandwidth_opt", BandwidthOptPolicy)
+register("energy_opt", EnergyOptPolicy)
 register("adaptive_codec", AdaptiveCodecPolicy)

@@ -85,6 +85,12 @@ class AsyncAggregator:
         size = self.buffer_size if size is None else int(size)
         entries: list[_InFlight] = []
         while len(entries) < size:
+            # stop once no completions remain in flight: the heap may
+            # still hold other kinds (e.g. deadline-expiry markers for
+            # dropped uploads) whose — possibly far-future — times must
+            # not drag the clock forward when nothing is arriving
+            if self._in_flight - len(entries) <= 0:
+                break
             ev = self.clock.pop()
             if ev is None:
                 break

@@ -1,10 +1,22 @@
-"""Event-driven simulation clock for the edge runtime.
+"""Event-driven simulation clock + deadline events for the edge runtime.
 
 A minimal discrete-event core: the runtime pushes client-completion (or
 arbitrary) events tagged with absolute times and pops them in time order.
-Synchronous rounds reduce to ``advance(max_k t_k)``; the buffered
-asynchronous aggregator pops completions one by one and lets the round
-boundary fall wherever its buffer fills.
+Synchronous rounds reduce to ``advance(max_k t_k)`` — capped per client
+by any enforced deadline — and the buffered asynchronous aggregator pops
+completions one by one and lets the round boundary fall wherever its
+buffer fills.
+
+This module also owns the *deadline verdict*: the one predicted-vs-
+realized authority (:func:`enforce_deadlines`) both the synchronous
+barrier and the async expiry path consult, so a policy's admission rule
+and the runtime's cutoff can never disagree about what "finishing in
+time" means.  A client is late iff its realized finish (compute plus
+uplink at its *granted* subchannel width) exceeds its granted deadline
+by more than the tolerance; a late client's upload is cut off at the
+deadline — the bytes it put on the air before the cutoff are billed,
+the payload itself is discarded whole (a hard drop, never a silent
+partial delta).
 """
 from __future__ import annotations
 
@@ -12,6 +24,96 @@ import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, Optional
+
+import numpy as np
+
+DEADLINE_EXPIRED = "deadline_expired"   # event kind: an async grant lapsed
+
+
+@dataclass
+class DeadlineVerdict:
+    """The runtime's enforcement of the deadlines a RoundDecision granted.
+
+    All arrays align with ``clients`` (the round's allocated cohort).
+    ``tx_frac`` is the fraction of the upload's wire bytes that made it
+    onto the air before the cutoff — 1.0 for every on-time client, and
+    strictly < 1 for every dropped one (transmission is linear in time,
+    so the byte fraction equals the air-time fraction)."""
+    clients: np.ndarray      # (k,) allocated cohort ids
+    deadline_s: np.ndarray   # (k,) effective per-client deadlines (inf = none)
+    finish_s: np.ndarray     # (k,) realized finish at granted widths
+    t_comp_s: np.ndarray     # (k,) compute-only share of finish_s
+    dropped: np.ndarray      # (k,) bool: finish_s > deadline_s + tolerance
+    tx_frac: np.ndarray      # (k,) upload byte fraction on the air by cutoff
+
+    @property
+    def any_dropped(self) -> bool:
+        return bool(self.dropped.any())
+
+    @property
+    def n_dropped(self) -> int:
+        return int(self.dropped.sum())
+
+    def survivor_ids(self) -> list[int]:
+        return [int(c) for c in self.clients[~self.dropped]]
+
+    def capped_spend_j(self, time_s, energy_j, tx_power_w) -> np.ndarray:
+        """Battery drain capped at each client's cutoff: the estimate's
+        energy is split into compute and transmit shares (E_tx = P_tx ·
+        t_up, the channel's uplink energy model), compute billed up to
+        min(t_comp, deadline) and transmit for the tx_frac actually on
+        the air.  Reduces to ``energy_j`` exactly for on-time clients —
+        the one energy rule the sync barrier and the async dispatch both
+        apply."""
+        t_up = np.maximum(np.asarray(time_s, dtype=float) - self.t_comp_s,
+                          0.0)
+        e_tx = float(tx_power_w) * t_up
+        e_comp = np.maximum(np.asarray(energy_j, dtype=float) - e_tx, 0.0)
+        comp_frac = np.minimum(
+            1.0, self.deadline_s / np.maximum(self.t_comp_s, 1e-300))
+        return e_comp * comp_frac + e_tx * self.tx_frac
+
+    def reasons(self) -> dict[int, str]:
+        """Per dropped client, why the runtime cut it off (never empty)."""
+        out = {}
+        for c, f, d, fr in zip(self.clients[self.dropped],
+                               self.finish_s[self.dropped],
+                               self.deadline_s[self.dropped],
+                               self.tx_frac[self.dropped]):
+            out[int(c)] = (f"realized finish {f:.3g}s > deadline {d:g}s "
+                           f"({100.0 * fr:.0f}% of the upload transmitted "
+                           "before cutoff, payload discarded)")
+        return out
+
+
+def enforce_deadlines(clients, finish_s, t_comp_s, deadline_s,
+                      tolerance_s: float = 0.0) -> DeadlineVerdict:
+    """Judge one allocated cohort against its granted deadlines.
+
+    ``finish_s`` is the REALIZED per-client finish — compute plus uplink
+    at the widths the RoundDecision actually granted, under this round's
+    channel draw — which is exactly what an admission policy predicting
+    under the *nominal* equal split upper-bounds (survivors share at
+    least the nominal width), so a client admitted by the ``deadline``
+    policy under zero channel noise is never dropped here.
+    ``tolerance_s`` absorbs float jitter between the two computations;
+    it widens the admission, never the cutoff (billing cuts at the
+    deadline itself)."""
+    c = np.asarray(clients, dtype=int)
+    f = np.asarray(finish_s, dtype=float)
+    tc = np.asarray(t_comp_s, dtype=float)
+    d = np.broadcast_to(np.asarray(deadline_s, dtype=float), c.shape)
+    dropped = f > d + float(tolerance_s)
+    t_up = np.maximum(f - tc, 0.0)
+    air = np.clip(d - tc, 0.0, None)       # air time available before cutoff
+    frac = np.where(
+        dropped,
+        np.where(t_up > 0.0, np.minimum(air / np.maximum(t_up, 1e-300), 1.0),
+                 0.0),
+        1.0)
+    return DeadlineVerdict(clients=c, deadline_s=np.asarray(d, dtype=float),
+                           finish_s=f, t_comp_s=tc, dropped=dropped,
+                           tx_frac=frac)
 
 
 @dataclass(order=True)
@@ -69,14 +171,20 @@ class EventClock:
         self._now += float(delta)
         return self._now
 
-    def round_time(self, client_times, quantile: float = 1.0) -> float:
+    def round_time(self, client_times, quantile: float = 1.0,
+                   cap_s=None) -> float:
         """Synchronous-round wall time: the ``quantile`` of per-client
         completion times (1.0 = wait for the slowest; <1 models deadline
-        truncation where stragglers are dropped at the quantile)."""
-        import numpy as np
-
+        truncation where stragglers are dropped at the quantile).
+        ``cap_s`` (scalar or per-client array) caps each completion at
+        its enforced deadline first, so the barrier is
+        min(deadline, max_k t_k) — a cut-off straggler never holds the
+        round open past its grant."""
         ts = np.asarray(list(client_times), dtype=np.float64)
         if ts.size == 0:
             return 0.0
+        if cap_s is not None:
+            ts = np.minimum(ts, np.broadcast_to(
+                np.asarray(cap_s, dtype=np.float64), ts.shape))
         q = min(max(quantile, 0.0), 1.0)
         return float(np.quantile(ts, q))

@@ -32,7 +32,8 @@ from repro.edge.allocation import (ClientEstimate, RoundDecision, RoundState,
 from repro.edge.async_agg import AsyncAggregator
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet
-from repro.edge.events import EventClock
+from repro.edge.events import (DEADLINE_EXPIRED, DeadlineVerdict, EventClock,
+                               enforce_deadlines)
 
 
 @dataclass(frozen=True)
@@ -40,8 +41,9 @@ class EdgeConfig:
     """Knobs for the simulated wireless edge (all times seconds, energies
     joules).  ``scheduler`` names the allocation policy (the legacy field
     name is kept): uniform | deadline | energy_threshold |
-    capacity_proportional | bandwidth_opt | adaptive_codec, or any
-    registered ``repro.edge.allocation`` name; ``mode`` ∈ {sync, async}.
+    capacity_proportional | bandwidth_opt | energy_opt | adaptive_codec,
+    or any registered ``repro.edge.allocation`` name;
+    ``mode`` ∈ {sync, async}.
 
     ``bandwidth_budget_hz`` is the shared round uplink budget every
     policy apportions; 0 (default) resolves to ``k × channel.bandwidth_hz``
@@ -51,8 +53,18 @@ class EdgeConfig:
     device: DeviceConfig = field(default_factory=DeviceConfig)
     scheduler: str = "uniform"           # allocation-policy name
     bandwidth_budget_hz: float = 0.0     # 0 -> k * channel.bandwidth_hz
-    deadline_s: float = 1.0              # deadline policy
+    deadline_s: float = 1.0              # deadline / energy_opt policies
     min_clients: int = 1
+    # runtime deadline enforcement: Allocation.deadline_s is a contract —
+    # a client whose realized finish exceeds min(its grant,
+    # enforce_deadline_s) is cut off at the barrier (upload discarded,
+    # only on-air bytes billed).  enforce_deadline_s (inf = off) is a
+    # hard per-round cap applied to EVERY client regardless of policy;
+    # deadline_tolerance_s is the slack before a finish counts as late
+    # (absorbs predicted-vs-realized float jitter — it widens admission,
+    # never the billing cutoff).
+    enforce_deadline_s: float = float("inf")
+    deadline_tolerance_s: float = 1e-9
     battery_floor_j: float = 0.0         # energy_threshold policy
     round_budget_j: float = float("inf")
     adaptive_ratio: float = 0.25         # adaptive_codec: top-k ratio at the
@@ -92,11 +104,23 @@ class EdgeRuntime:
         self.busy: set[int] = set()      # async: clients with work in flight
         self._held_hz: dict[int, float] = {}  # async: spectrum still on the
                                               # air from earlier dispatches
+        self._expiry: dict[int, float] = {}   # async: client -> clock time a
+                                              # busted grant lapses (spectrum
+                                              # + busy released then)
+        self._expired_unrecorded = 0     # async: grants that lapsed outside
+                                         # a pop (decide-time release), still
+                                         # owed to a history record
         self._buffer_resolved = False    # async auto-buffer picked yet?
         self.energy_j = 0.0
-        self.dropped_total = 0
+        self.dropped_total = 0           # policy exclusions (a priori)
+        self.deadline_dropped_total = 0  # runtime cutoffs (at the barrier)
         self.history: list[dict] = []
         self.decisions: list[RoundDecision] = []
+        # one verdict per decision (None when no finite deadline applies);
+        # _verdict is the pending one finish_round_sync / dispatch_async
+        # consumes for the in-progress round
+        self.verdicts: list[Optional[DeadlineVerdict]] = []
+        self._verdict: Optional[DeadlineVerdict] = None
 
     # ------------------------------------------------------------------
     def budget_hz(self, k: int) -> float:
@@ -152,13 +176,16 @@ class EdgeRuntime:
     def _apply(self, decision: RoundDecision, state: RoundState, wire_fn,
                flops) -> ClientEstimate:
         """Commit a decision: per-client subchannel widths into the
-        channel, then re-estimate the selected cohort at its allocated
-        rates and per-client wire bytes.  ``flops`` aligns with
-        ``state.est.clients``."""
+        channel, re-estimate the selected cohort at its allocated rates
+        and per-client wire bytes, then judge the realized finishes
+        against the granted deadlines (``_enforce``).  ``flops`` aligns
+        with ``state.est.clients``."""
         self.decisions.append(decision)
         self.dropped_total += len(decision.excluded)
         sel = decision.selected
         if not sel:
+            self.verdicts.append(None)
+            self._verdict = None
             return self._empty_est()
         pos = {int(c): j for j, c in enumerate(state.est.clients)}
         missing = [int(i) for i in sel if int(i) not in pos]
@@ -172,7 +199,33 @@ class EdgeRuntime:
         up = np.asarray([sum(wire_fn(decision.codec_for(i)))
                          * mult[pos[int(i)]] for i in sel], dtype=float)
         fl_sel = np.asarray([flops[pos[int(i)]] for i in sel], dtype=float)
-        return self.estimate(sel, up, fl_sel)
+        est_sel = self.estimate(sel, up, fl_sel)
+        self._enforce(decision, est_sel, fl_sel)
+        return est_sel
+
+    def _enforce(self, decision: RoundDecision, est_sel: ClientEstimate,
+                 fl_sel: np.ndarray) -> None:
+        """Judge the allocated cohort's REALIZED finishes (compute +
+        uplink at the granted widths, this round's channel draw) against
+        the effective per-client deadlines: min(the policy's grant,
+        cfg.enforce_deadline_s).  Late clients are marked dropped on the
+        decision with a reason; the verdict (drop mask + on-air byte
+        fractions) is held for finish_round_sync / dispatch_async."""
+        c = est_sel.clients
+        grants = np.asarray([decision.allocations[int(i)].deadline_s
+                             for i in c], dtype=float)
+        d_eff = np.minimum(grants, self.cfg.enforce_deadline_s)
+        if not np.isfinite(d_eff).any():
+            self.verdicts.append(None)
+            self._verdict = None
+            return
+        t_comp = fl_sel / np.maximum(self.fleet.flops_per_s[c], 1.0)
+        verdict = enforce_deadlines(c, est_sel.time_s, t_comp, d_eff,
+                                    self.cfg.deadline_tolerance_s)
+        decision.dropped.update(verdict.reasons())
+        self.deadline_dropped_total += verdict.n_dropped
+        self.verdicts.append(verdict)
+        self._verdict = verdict
 
     def decide(self, k: int, eligible, wire_fn: Callable, flops,
                summable: bool = True, codec=None
@@ -182,12 +235,18 @@ class EdgeRuntime:
         to one client's (aggregatable, non-aggregatable) upload wire
         bytes.  Returns (cohort ids, allocation-aware estimates for the
         cohort, the RoundDecision)."""
+        # grants that lapsed since the last pop free their spectrum now;
+        # the next pop's history record picks up the count so
+        # Σ history['dropped'] reconciles with deadline_dropped_total
+        self._expired_unrecorded += self._release_expired()
         self.channel.sample()
         eligible = np.asarray(eligible, dtype=int)
         alive = self.fleet.alive(eligible)
         if alive.size == 0:
             decision = RoundDecision(budget_hz=self.budget_hz(k))
             self.decisions.append(decision)
+            self.verdicts.append(None)
+            self._verdict = None
             return [], self._empty_est(), decision
         fl = np.broadcast_to(np.asarray(flops, dtype=float), eligible.shape)
         keep = np.isin(eligible, alive)
@@ -244,16 +303,29 @@ class EdgeRuntime:
         tree: compute barrier, then the aggregation phase (log2(τ) hops
         for summable payloads, serialized root link otherwise).
 
+        Deadline enforcement: if the round's decision granted finite
+        deadlines (the verdict ``decide``/``allocate_for`` computed), the
+        barrier is min(deadline, max_k t_k) — a late client is cut off
+        at its grant and never holds the round open.  Its on-air bytes
+        (``tx_frac`` of the upload) still cross the shared server slice
+        and its battery is drained for the work actually done (compute
+        up to the cutoff, transmit up to the cutoff), but the payload is
+        gone: ``up_bytes`` here are the wire bytes the caller billed,
+        scaled internally by the verdict's fractions.
+
         ``up_bytes`` / ``nonagg_bytes`` are scalars or per-client arrays
         aligned with ``est_sel.clients`` (heterogeneous codecs);
         ``nonagg_bytes`` carves that share of ``up_bytes`` out as
         non-aggregatable (mixed payloads, e.g. FedDANE's gradient + model
         phases) and overrides ``aggregatable`` when given."""
+        verdict, self._verdict = self._verdict, None
         c = est_sel.clients
         if c.size == 0:
             # empty cohort: nothing is broadcast or transmitted — the
             # clock must agree with the ledger's zero-byte round
             return self._record(0.0, 0.0, c)
+        if verdict is not None and not np.array_equal(verdict.clients, c):
+            verdict = None      # est does not cover the judged cohort
         t_down = self.channel.downlink_time_s(down_bytes)
         up = np.broadcast_to(np.asarray(up_bytes, dtype=float), c.shape)
         if nonagg_bytes is None:
@@ -262,43 +334,116 @@ class EdgeRuntime:
             nonagg = np.minimum(
                 np.broadcast_to(np.asarray(nonagg_bytes, dtype=float),
                                 c.shape), up)
-        agg = up - nonagg
+        if verdict is None:
+            deadlines = np.full(c.shape, np.inf)
+            frac = np.ones(c.shape)
+            n_dropped = 0
+        else:
+            deadlines = verdict.deadline_s
+            frac = verdict.tx_frac
+            n_dropped = verdict.n_dropped
+        # only the bytes on the air before each cutoff cross the network
+        agg = (up - nonagg) * frac
+        nonagg = nonagg * frac
+        # a client is active until min(its finish, its deadline)
+        active = np.minimum(est_sel.time_s, deadlines)
         if self.channel.cfg.topology == "tree":
-            fl_t = est_sel.time_s - self.channel.uplink_time_s(up, c)
-            t_round = float(np.max(fl_t)) + self.channel.comm_round_time_split(
+            fl_t = np.minimum(est_sel.time_s
+                              - self.channel.uplink_time_s(up, c), deadlines)
+            barrier = float(np.max(fl_t))
+            t_round = barrier + self.channel.comm_round_time_split(
                 agg, nonagg, c)
         else:
             # per-client completions in parallel subchannels, then the
             # shared server slice drains the cohort's payloads
-            t_round = max(self.clock.round_time(est_sel.time_s),
+            barrier = self.clock.round_time(est_sel.time_s, cap_s=deadlines)
+            t_round = max(barrier,
                           self.channel.comm_round_time_split(agg, nonagg, c))
         self.clock.advance(t_down + t_round)
-        # synchronous barrier: a client that finishes early sits idle until
-        # the round closes, draining idle_power_w the whole wait
-        idle_s = np.maximum(t_round - est_sel.time_s, 0.0)
-        spend_j = est_sel.energy_j + self.fleet.cfg.idle_power_w * idle_s
+        # synchronous barrier: a client that finishes early (or was cut
+        # off) sits idle until the round closes, draining idle_power_w
+        idle_s = np.maximum(t_round - active, 0.0)
+        if verdict is None:
+            spend_j = est_sel.energy_j
+        else:
+            spend_j = verdict.capped_spend_j(est_sel.time_s,
+                                             est_sel.energy_j,
+                                             self.channel.cfg.tx_power_w)
+        spend_j = spend_j + self.fleet.cfg.idle_power_w * idle_s
         e = float(spend_j.sum())
         self.fleet.spend(c, spend_j)
-        return self._record(t_down + t_round, e, c)
+        landed = c if verdict is None else c[~verdict.dropped]
+        return self._record(t_down + t_round, e, landed,
+                            dropped=n_dropped, barrier_s=barrier)
 
     def dispatch_async(self, est_sel: ClientEstimate, n_samples, payloads,
                        down_bytes: float) -> None:
         """Submit the cohort's results into the in-flight buffer (energy is
         spent at dispatch — the client does the work regardless of when
-        its update lands)."""
+        its update lands).
+
+        Deadline enforcement: a dispatched client whose realized finish
+        busts its granted deadline never lands — instead of a completion
+        it gets a per-client *expiry event* at its cutoff; when the clock
+        passes it, the granted spectrum returns to the pool and the
+        device becomes selectable again (``_release_expired``).  Its
+        battery is drained only for the work done before the cutoff.
+        ``n_samples`` / ``payloads`` align with the SURVIVORS — a cut-off
+        client's payload is never materialized."""
         assert self.async_agg is not None, "EdgeConfig.mode != 'async'"
+        verdict, self._verdict = self._verdict, None
         if est_sel.clients.size == 0:
             return  # empty cohort: nothing broadcast, nothing in flight
+        if verdict is not None and not np.array_equal(verdict.clients,
+                                                      est_sel.clients):
+            verdict = None
+        drop = (np.zeros(est_sel.clients.shape, bool) if verdict is None
+                else verdict.dropped)
+        n_surv = int((~drop).sum())
+        if len(payloads) != n_surv:
+            raise ValueError(
+                f"dispatch_async got {len(payloads)} payloads for "
+                f"{n_surv} surviving clients (cohort {est_sel.clients.size}, "
+                f"{int(drop.sum())} past deadline)")
         if self.cfg.buffer_size == 0 and not self._buffer_resolved:
-            self.async_agg.buffer_size = max(1, (est_sel.clients.size + 1) // 2)
+            self.async_agg.buffer_size = max(1, (n_surv + 1) // 2)
             self._buffer_resolved = True
         self.clock.advance(self.channel.downlink_time_s(down_bytes))
-        self.fleet.spend(est_sel.clients, est_sel.energy_j)
-        self.energy_j += float(est_sel.energy_j.sum())
+        if verdict is None:
+            spend_j = est_sel.energy_j
+        else:
+            spend_j = verdict.capped_spend_j(est_sel.time_s,
+                                             est_sel.energy_j,
+                                             self.channel.cfg.tx_power_w)
+        self.fleet.spend(est_sel.clients, spend_j)
+        self.energy_j += float(spend_j.sum())
+        j = 0
         for i, cl in enumerate(est_sel.clients):
-            self.busy.add(int(cl))
-            self.async_agg.submit(int(cl), float(est_sel.time_s[i]),
-                                  float(np.asarray(n_samples)[i]), payloads[i])
+            cl = int(cl)
+            self.busy.add(cl)
+            if drop[i]:
+                # the grant lapses at the cutoff: spectrum + device are
+                # released when the clock reaches it, the upload never
+                # enters the buffer
+                expires = self.clock.now + float(verdict.deadline_s[i])
+                self._expiry[cl] = expires
+                self.clock.push(expires, kind=DEADLINE_EXPIRED, client=cl)
+            else:
+                self.async_agg.submit(cl, float(est_sel.time_s[i]),
+                                      float(np.asarray(n_samples)[j]),
+                                      payloads[j])
+                j += 1
+
+    def _release_expired(self) -> int:
+        """Release spectrum + busy state for every expired grant the
+        clock has passed; returns how many lapsed."""
+        lapsed = [cl for cl, t in self._expiry.items()
+                  if t <= self.clock.now + 1e-12]
+        for cl in lapsed:
+            del self._expiry[cl]
+            self._held_hz.pop(cl, None)
+            self.busy.discard(cl)
+        return len(lapsed)
 
     def pop_async_buffer(self):
         """Drain the next buffer; advances the clock to its last arrival.
@@ -309,15 +454,29 @@ class EdgeRuntime:
         for e in entries:
             self.busy.discard(e.client)
             self._held_hz.pop(e.client, None)  # subchannel released
+        expired = self._release_expired() + self._expired_unrecorded
+        self._expired_unrecorded = 0
         self._record(self.clock.now - t0, 0.0,
-                     np.asarray([e.client for e in entries], int))
+                     np.asarray([e.client for e in entries], int),
+                     dropped=expired)
         return entries, w
 
     # ------------------------------------------------------------------
-    def _record(self, wall_s: float, energy_j: float, clients) -> dict:
+    def _record(self, wall_s: float, energy_j: float, clients,
+                dropped: int = 0, barrier_s: Optional[float] = None) -> dict:
+        """``clients`` are the LANDED cohort (an all-dropped round records
+        cohort=0); ``barrier_s`` is the enforced client-completion
+        barrier — min(deadline, max_k t_k) — before the shared server
+        drain and downlink are added.  Sync rounds record ``dropped`` at
+        judgment; async records a drop when its lapsed grant is released
+        (Σ history drops == deadline_dropped_total once every pending
+        expiry has passed)."""
         self.energy_j += energy_j
         rec = {"wall_s": float(wall_s), "clock_s": self.clock.now,
-               "energy_j": self.energy_j, "cohort": len(clients)}
+               "energy_j": self.energy_j, "cohort": len(clients),
+               "dropped": int(dropped)}
+        if barrier_s is not None:
+            rec["barrier_s"] = float(barrier_s)
         self.history.append(rec)
         return rec
 
@@ -327,6 +486,7 @@ class EdgeRuntime:
             "energy_j": self.energy_j,
             "rounds": len(self.history),
             "dropped_total": self.dropped_total,
+            "deadline_dropped_total": self.deadline_dropped_total,
             "depleted_clients": int((self.fleet.battery_j <= 0).sum()),
             "in_flight": 0 if self.async_agg is None else self.async_agg.in_flight,
         }

@@ -20,7 +20,13 @@ owns everything algorithm-independent:
     the sparsifiers need — keyed by true client id, so stale async
     deltas keep their correction,
   * synchronous edge finishing and buffered-async aggregation — async is
-    available to any strategy whose plan marks its payload ``summable``.
+    available to any strategy whose plan marks its payload ``summable``,
+  * deadline enforcement: ``Allocation.deadline_s`` is a runtime
+    contract — a client whose realized finish busts its grant is cut off
+    at the barrier (upload discarded whole, on-air bytes billed, the
+    on-time partial cohort aggregated with re-normalized weights; async
+    dispatches get per-client expiry events that hand granted spectrum
+    back to the pool).
 
 Registered algorithms: "fim_lbfgs" (Algorithm 1), "fedavg_sgd",
 "fedavg_adam", "fedprox", "feddane", "fedova" / "fedova_lbfgs"
@@ -88,6 +94,8 @@ class FederatedRun:
                     "distinct models/components (summable=False)")
         self._edge_est = None
         self._decision = None           # this round's RoundDecision
+        self._round_verdict = None      # its DeadlineVerdict (None = no
+                                        # finite deadline this round)
         self._flops_cache: dict[int, float] = {}
 
     # ------------------------------------------------------------------
@@ -150,6 +158,9 @@ class FederatedRun:
             summable=self.plan.summable, codec=self.codec)
         self._edge_est = est
         self._decision = decision
+        # pin the round <-> verdict pairing at decide time, so metering
+        # can never scale bytes by a different round's tx_frac
+        self._round_verdict = self.edge.verdicts[-1]
         return selected
 
     def _meter_round(self, selected: list[int]) -> None:
@@ -158,30 +169,47 @@ class FederatedRun:
         per-client codec overrides from the allocation policy, where
         each client is billed its own wire size.  An empty cohort still
         counts as a round but bills nothing — no uploads, no Gram scalar
-        exchange (the server step is skipped too)."""
+        exchange (the server step is skipped too).
+
+        Deadline drops truncate billing: a client cut off at the barrier
+        is billed only the ``tx_frac`` of its upload that was on the air
+        before the cutoff (its payload never lands), and the Gram scalar
+        exchange covers only the clients whose uploads did land — so
+        ledger ≤ plan, with equality iff nobody was dropped."""
         n_selected = len(selected)
         if n_selected == 0:
             self.ledger.end_round()
             return
         hetero = (self._decision is not None
                   and self._decision.heterogeneous_codecs)
+        verdict = self._round_verdict
+        frac = {}
+        if verdict is not None and verdict.any_dropped:
+            frac = {int(c): float(f)
+                    for c, f in zip(verdict.clients, verdict.tx_frac)
+                    if f < 1.0}
         for ph in self.plan.phases:
             if ph.down_floats:
+                # every selected client received the broadcast, including
+                # the ones later cut off on the uplink
                 self.ledger.broadcast(ph.down_floats, n_selected)
             if not ph.up_floats:
                 continue
-            if hetero:
+            if hetero or frac:
                 wire = [(self._decision.codec_for(i) or ph.codec)
-                        .wire_bytes(ph.up_floats) for i in selected]
+                        .wire_bytes(ph.up_floats) * frac.get(int(i), 1.0)
+                        for i in selected]
                 self.ledger.upload_per_client(wire,
                                               aggregatable=ph.aggregatable)
             else:
                 self.ledger.upload(ph.up_floats, n_selected,
                                    aggregatable=ph.aggregatable,
                                    wire_bytes=ph.wire_up_bytes())
+        n_landed = n_selected - (0 if self._decision is None
+                                 else len(self._decision.dropped))
         n_scalars = (self.plan.round_scalars
-                     + self.plan.scalars_per_client * n_selected)
-        if n_scalars:
+                     + self.plan.scalars_per_client * n_landed)
+        if n_scalars and n_landed:
             self.ledger.scalars(n_scalars)
         self.ledger.end_round()
 
@@ -198,6 +226,8 @@ class FederatedRun:
                 nonagg_bytes=nonagg)
             info.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
                         energy_j=rec["energy_j"])
+            if "barrier_s" in rec:
+                info["barrier_s"] = rec["barrier_s"]
         return info
 
     def _client_data(self, k: int):
@@ -213,13 +243,25 @@ class FederatedRun:
 
         An empty cohort (an exclusionary scheduler, e.g. energy_threshold,
         can reject everyone) is recorded as ``cohort=0`` with no ``loss``
-        entry and the server step skipped — never an np.mean([]) NaN."""
+        entry and the server step skipped — never an np.mean([]) NaN.
+        A cohort whose every client busted its deadline is the same
+        empty-cohort round, except the partial uploads are billed and the
+        clock/batteries advance.
+
+        Deadline enforcement: clients the runtime cut off at the barrier
+        (``decision.dropped``) never land — their client step is not run
+        (a hard drop: no partial deltas, no error-feedback update), the
+        server aggregates the on-time partial cohort with re-normalized
+        n_k weights, and the ledger bills only their on-air bytes."""
         selected = self.sample_clients()
+        dropped = ({} if self._decision is None
+                   else self._decision.dropped)
+        landed = [i for i in selected if i not in dropped]
         self._meter_round(selected)
-        datas = [self._client_data(i) for i in selected]
+        datas = [self._client_data(i) for i in landed]
         context = self.strategy.round_context(datas, self.rng)
         payloads, weights, losses = [], [], []
-        for j, (cid, data) in enumerate(zip(selected, datas)):
+        for j, (cid, data) in enumerate(zip(landed, datas)):
             payload, loss = self.strategy.client_step(
                 data, self.rng, None if context is None else context[j])
             # the allocation policy may hand this client its own wire
@@ -236,7 +278,9 @@ class FederatedRun:
             payloads.append(payload)
             weights.append(len(data[0]))
             losses.append(loss)
-        info = {"cohort": len(selected)}
+        info = {"cohort": len(landed)}
+        if dropped:
+            info["dropped"] = len(dropped)
         if losses:
             info["loss"] = float(np.mean(losses))
         if self.edge is not None and self.edge.async_agg is not None:

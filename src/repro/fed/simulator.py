@@ -128,7 +128,13 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
     Each round the edge's AllocationPolicy apportions the shared
     bandwidth budget over the given cohort (``EdgeRuntime.allocate_for``
     — selection already happened upstream, only the ``allocate`` stage
-    runs), so e.g. ``bandwidth_opt`` shrinks the sync barrier here too.
+    runs, and it runs BEFORE the device step so deadline enforcement can
+    shape the aggregation), so e.g. ``bandwidth_opt`` shrinks the sync
+    barrier here too.  Granted deadlines are enforced: a cohort slot
+    whose device busts min(its grant, EdgeConfig.enforce_deadline_s) is
+    cut off at the barrier — its weight is zeroed so the in-jit
+    weighted_mean re-normalizes over the on-time partial cohort, and an
+    all-dropped round applies no server step.
     Policies that emit per-client *codecs* are rejected: the vmapped
     path round-trips every client through the one run codec, and billing
     wire formats the payloads never saw is the divergence this layer
@@ -157,10 +163,6 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
                 f"codec {codec.spec()!r} bills compressed uplink bytes: "
                 "pass key=... so the payloads actually round-trip through "
                 "it (or build the step with compress='none')")
-        # only forward key when given: a bare 4-arg round_step stays valid
-        args = (params, opt_state, cohort_batch, weights)
-        new_params, new_state, stats = (
-            round_step(*args) if key is None else round_step(*args, key))
         k, b = cohort_batch["y"].shape[:2]
         if clients is None:
             cohort = np.arange(k) % edge.num_clients
@@ -183,6 +185,24 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
                 "per-client upload codecs, but the vmapped cohort path "
                 "round-trips every client through the one run codec — "
                 "use FederatedRun for adaptive per-client wire formats")
+        # deadline enforcement: a cohort slot whose device busted its
+        # granted deadline contributes nothing — its weight is zeroed, so
+        # weighted_mean re-normalizes over the on-time partial cohort
+        # (an all-dropped round applies no server step at all)
+        mask = None
+        if decision.dropped:
+            mask = np.asarray([float(int(cc) not in decision.dropped)
+                               for cc in cohort], dtype=np.float32)
+            weights = jnp.asarray(weights) * mask
+        if mask is not None and not mask.any():
+            new_params, new_state, stats = (
+                params, opt_state, {"loss": float("nan")})
+        else:
+            # only forward key when given: a bare 4-arg round_step stays
+            # valid
+            args = (params, opt_state, cohort_batch, weights)
+            new_params, new_state, stats = (
+                round_step(*args) if key is None else round_step(*args, key))
         # duplicate cohort slots (mod fallback) share one subchannel but
         # carry one payload each — bill every slot
         uniq, counts = np.unique(cohort, return_counts=True)
@@ -192,7 +212,9 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
         rec = edge.finish_round_sync(est, up_arr, down_bytes)
         stats = dict(stats)
         stats.update(wall_s=rec["wall_s"], sim_time_s=rec["clock_s"],
-                     energy_j=rec["energy_j"])
+                     energy_j=rec["energy_j"], dropped=rec["dropped"])
+        if "barrier_s" in rec:
+            stats["barrier_s"] = rec["barrier_s"]
         return new_params, new_state, stats
 
     return edge_round_step

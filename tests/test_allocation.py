@@ -33,7 +33,7 @@ ALL_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox", "feddane",
             "fedova", "fedova_lbfgs"]
 SUMMABLE_ALGS = ["fim_lbfgs", "fedavg_sgd", "fedavg_adam", "fedprox"]
 BANDWIDTH_POLICIES = ["uniform", "deadline", "energy_threshold",
-                      "capacity_proportional", "bandwidth_opt"]
+                      "capacity_proportional", "bandwidth_opt", "energy_opt"]
 
 UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
                        fading="rayleigh", server_rate_bps=50e6)
@@ -164,7 +164,7 @@ def test_bandwidth_budget_knob_scales_round_time():
 # ------------------------------------------------------------- registry
 def test_registry_surface_and_knob_filtering():
     assert {"uniform", "deadline", "energy_threshold",
-            "capacity_proportional", "bandwidth_opt",
+            "capacity_proportional", "bandwidth_opt", "energy_opt",
             "adaptive_codec"} <= set(allocation.names())
     # make_policy drops knobs a policy does not accept (EdgeConfig passes
     # every knob it carries unconditionally)

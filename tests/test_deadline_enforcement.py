@@ -1,0 +1,413 @@
+"""Runtime deadline enforcement (`Allocation.deadline_s` as a contract).
+
+Property-based invariants (hypothesis, or the seeded fallback shim) over
+random fleets/deadlines, end-to-end through ``FederatedRun``:
+
+  (a) every client the runtime drops carries a non-empty reason,
+  (b) ledger uplink bytes ≤ plan bytes, with equality iff no drops
+      (truncated uploads are billed pro rata, payloads discarded whole),
+  (c) the enforced barrier is min(deadline, max_k t_k): ≤ deadline + ε
+      for every policy under a hard runtime deadline,
+  (d) energy_opt allocations never exceed the bandwidth budget and every
+      survivor meets the deadline.
+
+Plus the edge cases the tentpole changes what "a round" means for: the
+all-clients-dropped round (cohort=0, no server step — the PR-3
+empty-cohort behavior extended), ``min_clients`` honored under an
+infeasibly tight deadline (policy grants inf to forced keeps), the
+predicted-vs-realized agreement between the ``deadline`` admission
+policy and the runtime cutoff, and the acceptance benchmark claim:
+energy_opt strictly beats uniform on total joules at equal bytes and
+equal accuracy on the surviving cohort.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hermetic env: seeded deterministic fallback
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
+
+import jax
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+from repro.edge.runtime import EdgeRuntime
+from repro.fed.server import FederatedRun
+
+MCFG = reduced(FMNIST_CNN)
+UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+                       fading="rayleigh", server_rate_bps=50e6)
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+# one model-sized dataset for the whole module: property examples vary
+# seeds/deadlines, not shapes, so jit caches carry across examples
+TRAIN, TEST = make_classification(MCFG, n_train=300, n_test=100, seed=0,
+                                  noise=0.5)
+# the deadline grid property examples index into — from "drops everyone"
+# through "drops stragglers" to "binds nobody"
+DEADLINES = [0.05, 0.3, 0.8, 1.5, 3.0, 10.0, 1e4]
+
+
+def _run(policy="uniform", alg="fedavg_sgd", rounds=2, seed=0,
+         num_clients=8, **edge_kw):
+    edge = EdgeConfig(channel=UPLINK, device=HETERO, scheduler=policy,
+                      **edge_kw)
+    fcfg = FedConfig(num_clients=num_clients, participation=1.0,
+                     local_epochs=1, batch_size=32, rounds=rounds,
+                     noniid_l=2, seed=seed, edge=edge)
+    run = FederatedRun(MCFG, fcfg, TRAIN, TEST, alg)
+    hist = run.run(rounds=rounds, eval_every=rounds)
+    return run, hist
+
+
+def _expected_uplink(run):
+    """Recompute the expected ledger from decisions + verdicts: per
+    client, per phase, under its own codec, scaled by the fraction of
+    the upload on the air before its cutoff."""
+    star = 0.0
+    for dec, ver in zip(run.edge.decisions, run.edge.verdicts):
+        frac = ({} if ver is None else
+                {int(c): float(f)
+                 for c, f in zip(ver.clients, ver.tx_frac)})
+        for ph in run.plan.phases:
+            if not ph.up_floats:
+                continue
+            for i in dec.selected:
+                wire = (dec.codec_for(i) or ph.codec).wire_bytes(ph.up_floats)
+                star += wire * frac.get(int(i), 1.0)
+    return star
+
+
+# ---------------------------------------------------------------- properties
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=len(DEADLINES) - 1))
+def test_enforcement_invariants_random_fleets(seed, d_idx):
+    """(a) reasons, (b) ledger ≤ plan with equality iff no drops, and
+    plan == ledger for every landed client — under a hard runtime
+    deadline on the uniform policy, over random fleet/channel seeds."""
+    deadline = DEADLINES[d_idx]
+    run, hist = _run("uniform", seed=seed, enforce_deadline_s=deadline)
+    n_drops = 0
+    for dec, ver in zip(run.edge.decisions, run.edge.verdicts):
+        n_drops += len(dec.dropped)
+        for cid, why in dec.dropped.items():                       # (a)
+            assert why and isinstance(why, str), (seed, deadline, cid)
+            assert cid in dec.allocations, "dropped ⊆ allocated"
+        if ver is not None:
+            # a drop bills strictly less than the plan; a survivor bills
+            # exactly the plan (tx_frac is the billing authority)
+            for c, f, dr in zip(ver.clients, ver.tx_frac, ver.dropped):
+                assert (f < 1.0) == bool(dr), (seed, deadline, int(c))
+    plan_bytes = sum(
+        ph.wire_up_bytes() for ph in run.plan.phases if ph.up_floats) * sum(
+        len(d.selected) for d in run.edge.decisions)
+    assert run.ledger.up_star_bytes <= plan_bytes + 1e-6            # (b)
+    if n_drops == 0:
+        assert run.ledger.up_star_bytes == pytest.approx(plan_bytes)
+    else:
+        assert run.ledger.up_star_bytes < plan_bytes
+    assert run.ledger.up_star_bytes == pytest.approx(_expected_uplink(run))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=len(DEADLINES) - 2))
+def test_barrier_capped_for_all_policies(seed, d_idx):
+    """(c) the sync barrier is min(deadline, max_k t_k): with a hard
+    runtime deadline every round's client-completion barrier is ≤
+    deadline + tolerance, for every bandwidth policy."""
+    deadline = DEADLINES[d_idx]
+    for policy in ("uniform", "bandwidth_opt", "energy_opt", "deadline"):
+        run, hist = _run(policy, seed=seed, rounds=2,
+                         enforce_deadline_s=deadline, deadline_s=deadline,
+                         min_clients=1)
+        for rec in run.edge.history:
+            assert rec["barrier_s"] <= deadline + 1e-6, (policy, seed, rec)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=len(DEADLINES) - 1),
+       st.integers(min_value=3, max_value=16))
+def test_energy_opt_budget_and_deadline_feasibility(seed, d_idx, n):
+    """(d) runtime-level property (no model training): energy_opt never
+    over-allocates the budget, every survivor it grants the deadline to
+    finishes within it, and every exclusion carries a reason."""
+    deadline = DEADLINES[d_idx]
+    rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                scheduler="energy_opt", deadline_s=deadline,
+                                min_clients=1, seed=seed), n, seed=seed)
+    wire = (lambda c: (1.2e5, 0.0))
+    selected, est, dec = rt.decide(n, np.arange(n), wire, 1e9)
+    assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
+    assert all(a.bandwidth_hz > 0 for a in dec.allocations.values())
+    for cid, why in dec.excluded.items():
+        assert why and isinstance(why, str), (seed, deadline, cid)
+    assert not set(dec.selected) & set(dec.excluded)
+    ver = rt.verdicts[-1]
+    for i, cid in enumerate(est.clients):
+        grant = dec.allocations[int(cid)].deadline_s
+        if math.isfinite(grant):
+            assert est.time_s[i] <= grant + 1e-6, (seed, deadline, int(cid))
+    # a granted (finite-deadline) client is never dropped at the barrier
+    if ver is not None:
+        for c, dr in zip(ver.clients, ver.dropped):
+            assert not (dr and math.isfinite(
+                dec.allocations[int(c)].deadline_s)), (seed, deadline, int(c))
+
+
+# ---------------------------------------------------------------- edge cases
+def test_all_dropped_round_records_cohort_zero_no_server_step():
+    """An infeasibly tight hard deadline drops the whole cohort: the
+    round records cohort=0 with no loss and no server step (the PR-3
+    empty-cohort contract), while the partial uploads are still billed
+    and the clock advances to the deadline."""
+    run, hist = _run("uniform", rounds=2, enforce_deadline_s=0.01)
+    ref, _ = _run("uniform", rounds=0, enforce_deadline_s=0.01)
+    for h in hist:
+        assert h["cohort"] == 0
+        assert "loss" not in h
+        assert h["dropped"] > 0
+        assert h["barrier_s"] <= 0.01 + 1e-6
+    # no server step ever ran: params stayed at the init point
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(a, b)),
+                        run.params, ref.params)
+    assert all(jax.tree.leaves(same))
+    # the partial uploads were billed (bytes on the air before cutoff)
+    assert 0 < run.ledger.up_star_bytes
+
+
+def test_min_clients_honored_under_infeasible_deadline():
+    """The deadline POLICY under an infeasibly tight deadline force-
+    keeps the fastest min_clients with no deadline grant (inf) — the
+    runtime must not cut them off, so every round lands ≥ min_clients."""
+    run, hist = _run("deadline", rounds=3, deadline_s=1e-3, min_clients=2)
+    for h in hist:
+        assert h["cohort"] >= 2, hist
+    assert run.edge.deadline_dropped_total == 0
+    for dec in run.edge.decisions:
+        # forced keeps carry an inf grant; everyone else was excluded
+        # a priori with a reason
+        assert len(dec.allocations) == 2
+        assert all(not math.isfinite(a.deadline_s)
+                   for a in dec.allocations.values())
+        assert dec.excluded and all(dec.excluded.values())
+
+
+def test_energy_opt_min_clients_forced_keeps_survive():
+    """energy_opt under an infeasible deadline: min_clients force-kept
+    (inf grant), never dropped at the barrier, rest excluded with
+    reasons."""
+    run, hist = _run("energy_opt", rounds=2, deadline_s=1e-3, min_clients=3)
+    assert run.edge.deadline_dropped_total == 0
+    for h in hist:
+        assert h["cohort"] >= 3
+    for dec in run.edge.decisions:
+        assert len(dec.allocations) == 3
+        assert dec.excluded and all(dec.excluded.values())
+
+
+# ------------------------------------------------- policy/runtime agreement
+def test_deadline_policy_admission_never_dropped_at_barrier():
+    """The satellite fix: DeadlinePolicy predicts under the nominal
+    equal split, the runtime judges the realized finish at the granted
+    width (≥ nominal) under the SAME channel draw — so with zero channel
+    noise an admitted client is never dropped at the barrier.  The
+    tolerance knob (EdgeConfig.deadline_tolerance_s) only absorbs float
+    jitter between the two computations."""
+    quiet = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=0.0,
+                          fading="none", server_rate_bps=50e6)
+    # slow, strongly heterogeneous compute so predicted finishes straddle
+    # the deadline — some admitted, some excluded, every round
+    slow = DeviceConfig(flops_per_s_mean=5e7, flops_per_s_sigma=1.5)
+    edge = EdgeConfig(channel=quiet, device=slow, scheduler="deadline",
+                      deadline_s=2.0, min_clients=1, seed=3)
+    fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                     batch_size=32, rounds=4, noniid_l=2, seed=3, edge=edge)
+    run = FederatedRun(MCFG, fcfg, TRAIN, TEST, "fedavg_sgd")
+    run.run(rounds=4, eval_every=4)
+    assert run.edge.deadline_dropped_total == 0
+    saw_admitted = saw_excluded = False
+    for dec in run.edge.decisions:
+        assert not dec.dropped
+        saw_excluded |= bool(dec.excluded)
+        saw_admitted |= any(math.isfinite(a.deadline_s)
+                            for a in dec.allocations.values())
+    # the scenario must actually exercise both sides of the admission
+    assert saw_admitted and saw_excluded
+
+
+def test_tolerance_knob_threads_through():
+    rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                deadline_tolerance_s=0.25,
+                                enforce_deadline_s=1.0), 4)
+    assert rt.cfg.deadline_tolerance_s == 0.25
+    from repro.edge.events import enforce_deadlines
+    v = enforce_deadlines([0, 1], [1.2, 1.3], [0.1, 0.1], 1.0,
+                          tolerance_s=0.25)
+    # 1.2 ≤ 1.0 + 0.25 admitted; 1.3 > 1.25 dropped, billed at the 1.0s
+    # cutoff (tolerance widens admission, never billing)
+    assert not v.dropped[0] and v.dropped[1]
+    assert v.tx_frac[0] == 1.0
+    assert v.tx_frac[1] == pytest.approx(0.9 / 1.2)
+    assert v.reasons()[1]
+
+
+# ---------------------------------------------- acceptance: energy_opt wins
+def test_energy_opt_beats_uniform_on_joules_at_equal_bytes():
+    """The acceptance invariant: with a loose (non-binding) deadline the
+    three bandwidth-only policies land the same cohorts, the same
+    CommLedger bytes, and the same accuracy (allocation never changes
+    WHAT is learned) — but energy_opt's Σ joules is the constrained
+    minimum: strictly below uniform on a heterogeneous fleet, and no
+    worse than bandwidth_opt."""
+    runs = {}
+    for policy in ("uniform", "bandwidth_opt", "energy_opt"):
+        runs[policy], hist = _run(policy, rounds=3, deadline_s=1e4,
+                                  min_clients=1)
+        runs[policy]._acc = hist[-1]["accuracy"]
+    for f in ("down_bytes", "up_star_bytes", "up_tree_bytes",
+              "scalar_bytes", "rounds"):
+        assert (getattr(runs["uniform"].ledger, f)
+                == getattr(runs["energy_opt"].ledger, f)
+                == getattr(runs["bandwidth_opt"].ledger, f)), f
+    assert runs["energy_opt"]._acc == pytest.approx(runs["uniform"]._acc)
+    e = {p: r.edge.summary()["energy_j"] for p, r in runs.items()}
+    assert e["energy_opt"] < e["uniform"], e
+    assert e["energy_opt"] <= e["bandwidth_opt"] * (1 + 1e-9), e
+    # nobody was dropped or excluded: equal cohorts by construction
+    for r in runs.values():
+        assert r.edge.summary()["deadline_dropped_total"] == 0
+        assert all(not d.excluded for d in r.edge.decisions)
+
+
+def test_enforced_drop_keeps_plan_ledger_for_landed_clients():
+    """A runtime-enforced deadline round drops stragglers with reasons
+    while plan == ledger holds for every landed client (the acceptance
+    criterion, asserted per client through the verdict)."""
+    run, _ = _run("uniform", rounds=3, seed=1, enforce_deadline_s=0.8)
+    total_drops = sum(len(d.dropped) for d in run.edge.decisions)
+    assert total_drops > 0, "scenario must actually drop stragglers"
+    for dec in run.edge.decisions:
+        for cid, why in dec.dropped.items():
+            assert why
+    assert run.ledger.up_star_bytes == pytest.approx(_expected_uplink(run))
+    # and per landed client the bill is exactly the plan's wire bytes
+    for ver in run.edge.verdicts:
+        if ver is None:
+            continue
+        np.testing.assert_array_equal(ver.tx_frac[~ver.dropped], 1.0)
+
+
+def test_energy_opt_force_keeps_get_real_widths_not_slack_slivers():
+    """Regression: a force-kept (infeasible) client must hold at least
+    an equal-split-scale subchannel, like DeadlinePolicy's keeps — not
+    the vanishing bisection slack left after feasible floors (a ~0 Hz
+    width with an inf deadline would blow the barrier and Σ energy
+    unboundedly)."""
+    quiet = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=0.0,
+                          fading="none", server_rate_bps=50e6)
+    flat = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=0.0)
+    # uplink needs ~1.3s at the full 8e5 Hz budget per client, so a 2.0s
+    # deadline is infeasible for 4 clients sharing it: every slot is
+    # force-kept at the equal split (no deadline grants)
+    rt = EdgeRuntime(EdgeConfig(channel=quiet, device=flat,
+                                scheduler="energy_opt", deadline_s=2.0,
+                                min_clients=1,
+                                bandwidth_budget_hz=8e5), 4, seed=0)
+    est, dec = rt.allocate_for(np.arange(4), lambda c: (1.2e6, 0.0), 1e9)
+    share = dec.budget_hz / 4
+    for a in dec.allocations.values():
+        assert a.bandwidth_hz >= share * 0.99, dec.allocations
+    # bounded barrier: the equal-split finish, not a 1e15-second sliver
+    assert float(est.time_s.max()) < 1e3
+    # and when the deadline IS feasible for the forced width, the grant
+    # is re-derived from the width actually handed out
+    rt2 = EdgeRuntime(EdgeConfig(channel=quiet, device=flat,
+                                 scheduler="energy_opt", deadline_s=60.0,
+                                 bandwidth_budget_hz=8e5), 4, seed=0)
+    _, dec2 = rt2.allocate_for(np.arange(4), lambda c: (1.2e6, 0.0), 1e9)
+    assert all(math.isfinite(a.deadline_s)
+               for a in dec2.allocations.values())
+
+
+# ------------------------------------------------------- async + simulator
+def test_async_expiry_releases_spectrum_and_busy():
+    """Async dispatches get per-client expiry events: a client past its
+    deadline never lands in the buffer; once the clock passes its cutoff
+    the granted subchannel returns to the pool and the device becomes
+    selectable again."""
+    run, hist = _run("uniform", rounds=5, mode="async", buffer_size=2,
+                     enforce_deadline_s=1.0)
+    s = run.edge.summary()
+    assert s["deadline_dropped_total"] > 0
+    # every hold belongs to a client that is either still uploading or
+    # waiting out its expiry — never both released and held
+    assert set(run.edge._held_hz) <= (run.edge.busy | set(run.edge._expiry))
+    for cl, t in run.edge._expiry.items():
+        assert t > run.edge.clock.now  # pending expiries are in the future
+    # conservation: every dispatched client either landed in a buffer,
+    # is still in flight, or was dropped at its deadline — drops never
+    # reach the aggregation buffer
+    landed = sum(h.get("aggregated", 0) for h in hist)
+    dispatched = sum(len(d.selected) for d in run.edge.decisions)
+    assert (landed + s["in_flight"] + s["deadline_dropped_total"]
+            == dispatched)
+
+
+def test_async_underfilled_pop_does_not_chase_expiry_events():
+    """Regression: when the aggregation buffer underfills (fewer
+    completions in flight than buffer_size), draining it must not pop a
+    dropped client's far-future expiry marker and drag the clock to its
+    cutoff — a cut-off straggler never holds the round open."""
+    rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                scheduler="uniform", mode="async",
+                                buffer_size=4, enforce_deadline_s=60.0), 8,
+                     seed=0)
+    selected, est, dec = rt.decide(4, np.arange(8), lambda c: (1.2e6, 0.0),
+                                   1e11)
+    n_surv = len(selected) - len(dec.dropped)
+    assert dec.dropped and n_surv > 0, \
+        (dec.dropped, "scenario must mix survivors and drops")
+    rt.dispatch_async(est, [32.0] * n_surv, [object()] * n_surv, 1e5)
+    entries, _ = rt.pop_async_buffer()
+    assert len(entries) == n_surv        # underfilled: only real arrivals
+    # the clock stopped at the last completion, before the 60s cutoff
+    assert rt.clock.now < 60.0
+    assert all(t > rt.clock.now for t in rt._expiry.values())
+
+
+def test_with_edge_masks_dropped_slots():
+    """The vmapped path: a dropped cohort slot's weight is zeroed so the
+    in-jit weighted_mean re-normalizes over the on-time partial cohort;
+    the enforced barrier caps wall time."""
+    import jax.numpy as jnp
+    from repro.fed import simulator, strategies
+
+    s = strategies.get("fim_lbfgs")(MCFG, FedConfig(num_clients=8, seed=0),
+                                    10)
+    step = simulator.from_strategy(s)
+    edge = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
+                                  enforce_deadline_s=2.0), 8)
+    estep = simulator.with_edge(step, edge, s.n_params())
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(TRAIN.x), size=(6, 32))
+    cohort = {"x": jnp.asarray(TRAIN.x[idx]), "y": jnp.asarray(TRAIN.y[idx])}
+    new_params, _, stats = estep(s.params, s.opt_state, cohort, jnp.ones(6),
+                                 clients=np.arange(6))
+    dec = edge.decisions[-1]
+    assert stats["barrier_s"] <= 2.0 + 1e-6
+    assert stats["dropped"] == len(dec.dropped)
+    if len(dec.dropped) == 6:
+        same = jax.tree.map(lambda a, b: bool(np.array_equal(a, b)),
+                            new_params, s.params)
+        assert all(jax.tree.leaves(same))
+    for cid, why in dec.dropped.items():
+        assert why
