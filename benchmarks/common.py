@@ -1,8 +1,13 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV/JSON emission + timing."""
 from __future__ import annotations
 
 import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.export import write_bench_json  # noqa: E402
 
 
 def emit(rows, header, name):
@@ -16,6 +21,17 @@ def emit(rows, header, name):
     print(text)
     with open(path, "w") as f:
         f.write(text + "\n")
+    return path
+
+
+def emit_json(name, rows, header=None, meta=None):
+    """Write the tracked perf-trajectory snapshot ``BENCH_<name>.json``
+    at the repo root: {name, git_rev, timestamp, header, rows[, meta]}.
+    Complements :func:`emit` (the CSV keeps its behavior); the JSON is
+    the machine-diffable artifact CI archives per commit."""
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    path = write_bench_json(name, rows, header=header, meta=meta, root=root)
+    print(f"wrote {os.path.relpath(path)}")
     return path
 
 

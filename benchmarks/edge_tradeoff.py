@@ -39,13 +39,14 @@ bandwidth_opt).
 """
 from __future__ import annotations
 
+from repro import obs
 from repro.configs.base import FedConfig
 from repro.configs.paper_models import FMNIST_CNN, reduced
 from repro.data.synthetic import make_classification
 from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
 from repro.fed.server import FederatedRun
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 
 # Constrained uplink: ~100 kB/s per subchannel and a ~190 kB/s shared
 # server slice — a ~100 KB model update costs seconds and the cohort's
@@ -167,6 +168,15 @@ def run(quick: bool = True):
 
     # ---- Part E: energy-aware allocation under a deadline --------------
     energy_rows = run_energy_sweep(mcfg, train, test, quick)
+
+    # the tracked perf-trajectory snapshot: one machine-diffable JSON per
+    # commit with every part's rows (CI archives it as BENCH_edge_tradeoff)
+    emit_json("edge_tradeoff", rows,
+              header=["scheme", "topology", "mode", "rounds_to_acc55",
+                      "sim_time_s", "energy_J", "uplink_MB"],
+              meta={"quick": bool(quick),
+                    "schedulers": sched_rows, "codec_grid": codec_rows,
+                    "bandwidth_opt": alloc_rows, "energy_opt": energy_rows})
     return rows, sched_rows, codec_rows, alloc_rows, energy_rows
 
 
@@ -297,12 +307,24 @@ def run_energy_sweep(mcfg, train, test, quick: bool = True):
                              local_epochs=1, batch_size=10_000,
                              rounds=rounds, noniid_l=3, learning_rate=0.05,
                              seed=0, edge=edge)
-            run_ = FederatedRun(mcfg, fcfg, train, test, alg)
+            # trace the run: landed/dropped counts and realized cutoff
+            # times come from the tracer's records + verdict events, not
+            # re-derived from runtime internals
+            tracer = obs.Tracer(sink=lambda line: None)
+            run_ = FederatedRun(mcfg, fcfg, train, test, alg, tracer=tracer)
             hist = run_.run(rounds=rounds, eval_every=rounds)
             s = run_.edge.summary()
             assert s["deadline_dropped_total"] == 0 and \
                 all(not d.excluded for d in run_.edge.decisions), \
                 (alg, policy, "the deadline must not bind in Part E")
+            tracer.audit.verify(run_.ledger)
+            landed = sum(r["cohort"] for r in tracer.records)
+            dropped_n = sum(r["dropped"] for r in tracer.records)
+            cuts = [min(e.args["finish_s"],
+                        float("inf") if e.args["deadline_s"] is None
+                        else e.args["deadline_s"])
+                    for e in tracer.events_named(obs.VERDICT)]
+            mean_cut = sum(cuts) / len(cuts) if cuts else float("nan")
             led[policy] = run_.ledger.up_star_bytes
             joules[policy] = s["energy_j"]
             acc[policy] = hist[-1].get("accuracy", float("nan"))
@@ -310,7 +332,10 @@ def run_energy_sweep(mcfg, train, test, quick: bool = True):
                                 round(s["energy_j"] / rounds, 2),
                                 round(s["wall_clock_s"] / rounds, 2),
                                 round(run_.ledger.up_star_bytes / 1e6, 3),
-                                round(acc[policy], 3)])
+                                round(acc[policy], 3),
+                                round(landed / rounds, 2),
+                                round(dropped_n / rounds, 2),
+                                round(mean_cut, 3)])
         # equal bytes + equal accuracy on the surviving cohort ...
         assert led["energy_opt"] == led["uniform"] == led["bandwidth_opt"], \
             (alg, led)
@@ -325,7 +350,9 @@ def run_energy_sweep(mcfg, train, test, quick: bool = True):
               f"bytes/accuracy -> "
               f"x{joules['uniform'] / joules['energy_opt']:.2f} less energy")
     emit(energy_rows, ["scheme", "policy", "J_per_round", "sim_s_per_round",
-                       "uplink_MB_total", f"acc@r{rounds}"],
+                       "uplink_MB_total", f"acc@r{rounds}",
+                       "landed_per_round", "dropped_per_round",
+                       "mean_cutoff_s"],
          "edge_energy_opt")
     return energy_rows
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, emit_json, time_call
 
 
 def run(quick: bool = True):
@@ -48,7 +48,9 @@ def run(quick: bool = True):
         rows.append([f"flash_ref_B{B}H{H}S{S}", round(us, 1),
                      f"{flops / (us * 1e-6) / 1e9:.2f}GFLOP/s"])
 
-    return emit(rows, ["name", "us_per_call", "derived"], "kernels_bench")
+    header = ["name", "us_per_call", "derived"]
+    emit_json("kernels", rows, header=header, meta={"quick": bool(quick)})
+    return emit(rows, header, "kernels_bench")
 
 
 if __name__ == "__main__":

@@ -57,7 +57,7 @@ class AsyncAggregator:
     with its staleness-discounted weights."""
 
     def __init__(self, clock: EventClock, buffer_size: int = 1,
-                 alpha: float = 0.5):
+                 alpha: float = 0.5, tracer=None):
         self.clock = clock
         self.buffer_size = max(1, int(buffer_size))
         self.alpha = float(alpha)
@@ -65,6 +65,10 @@ class AsyncAggregator:
         # explicit counter: the shared clock may carry events other than
         # client completions, so len(clock) over-counts pending uploads
         self._in_flight = 0
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
 
     def submit(self, client: int, delay_s: float, n_samples: float,
                payload: Any) -> None:
@@ -103,4 +107,11 @@ class AsyncAggregator:
         stale = [self.version - e.version for e in entries]
         w = staleness_weights([e.n_samples for e in entries], stale, self.alpha)
         self.version += 1
+        if self.tracer.enabled:
+            from repro.obs import trace as _t
+            for e, tau in zip(entries, stale):
+                self.tracer.event(_t.LAND, _t.CAT_ASYNC, e.finish_time,
+                                  client=e.client, staleness=int(tau),
+                                  version=self.version)
+                self.tracer.metrics.histogram("async_staleness").observe(tau)
         return entries, w

@@ -87,7 +87,8 @@ class DeadlineVerdict:
 
 
 def enforce_deadlines(clients, finish_s, t_comp_s, deadline_s,
-                      tolerance_s: float = 0.0) -> DeadlineVerdict:
+                      tolerance_s: float = 0.0, tracer=None, t0: float = 0.0,
+                      round_id: int = -1) -> DeadlineVerdict:
     """Judge one allocated cohort against its granted deadlines.
 
     ``finish_s`` is the REALIZED per-client finish — compute plus uplink
@@ -98,7 +99,13 @@ def enforce_deadlines(clients, finish_s, t_comp_s, deadline_s,
     policy under zero channel noise is never dropped here.
     ``tolerance_s`` absorbs float jitter between the two computations;
     it widens the admission, never the cutoff (billing cuts at the
-    deadline itself)."""
+    deadline itself).
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`; default off) records
+    the verdict as one traced event per judged client — the granted
+    deadline vs the realized finish, the drop bit, and the on-air byte
+    fraction — timestamped at ``t0 + min(finish, deadline)`` on the
+    simulated timeline (``t0`` = the round's start)."""
     c = np.asarray(clients, dtype=int)
     f = np.asarray(finish_s, dtype=float)
     tc = np.asarray(t_comp_s, dtype=float)
@@ -111,9 +118,21 @@ def enforce_deadlines(clients, finish_s, t_comp_s, deadline_s,
         np.where(t_up > 0.0, np.minimum(air / np.maximum(t_up, 1e-300), 1.0),
                  0.0),
         1.0)
-    return DeadlineVerdict(clients=c, deadline_s=np.asarray(d, dtype=float),
-                           finish_s=f, t_comp_s=tc, dropped=dropped,
-                           tx_frac=frac)
+    verdict = DeadlineVerdict(clients=c, deadline_s=np.asarray(d, dtype=float),
+                              finish_s=f, t_comp_s=tc, dropped=dropped,
+                              tx_frac=frac)
+    if tracer is not None and tracer.enabled:
+        from repro.obs import trace as _t
+        for j in range(c.size):
+            cut = min(float(f[j]), float(d[j])) if np.isfinite(d[j]) \
+                else float(f[j])
+            tracer.event(
+                _t.VERDICT, _t.CAT_CLIENT, float(t0) + cut,
+                round_id=round_id, client=int(c[j]),
+                deadline_s=float(d[j]) if np.isfinite(d[j]) else None,
+                finish_s=float(f[j]), t_comp_s=float(tc[j]),
+                dropped=bool(dropped[j]), tx_frac=float(frac[j]))
+    return verdict
 
 
 @dataclass(order=True)

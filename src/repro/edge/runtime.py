@@ -34,6 +34,8 @@ from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet
 from repro.edge.events import (DEADLINE_EXPIRED, DeadlineVerdict, EventClock,
                                enforce_deadlines)
+from repro.obs import trace as obs
+from repro.obs.metrics import reason_key
 
 
 @dataclass(frozen=True)
@@ -79,9 +81,13 @@ class EdgeRuntime:
     """Mutable per-run edge state: channel fading, fleet batteries, the
     simulation clock, and (in async mode) the in-flight buffer."""
 
-    def __init__(self, cfg: EdgeConfig, num_clients: int, seed: int = 0):
+    def __init__(self, cfg: EdgeConfig, num_clients: int, seed: int = 0,
+                 tracer=None):
         self.cfg = cfg
         self.num_clients = num_clients
+        # obs: spans/events/metrics go here; the shared no-op default
+        # keeps the untraced hot path free (one attribute check per site)
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         s = seed + cfg.seed
         self.channel = Channel(cfg.channel, num_clients, seed=s + 1)
         self.fleet = DeviceFleet(cfg.device, num_clients, seed=s + 2)
@@ -100,7 +106,7 @@ class EdgeRuntime:
             # the first dispatch (see dispatch_async)
             self.async_agg = AsyncAggregator(
                 self.clock, buffer_size=max(cfg.buffer_size, 1),
-                alpha=cfg.staleness_alpha)
+                alpha=cfg.staleness_alpha, tracer=self.tracer)
         self.busy: set[int] = set()      # async: clients with work in flight
         self._held_hz: dict[int, float] = {}  # async: spectrum still on the
                                               # air from earlier dispatches
@@ -114,6 +120,12 @@ class EdgeRuntime:
         self.energy_j = 0.0
         self.dropped_total = 0           # policy exclusions (a priori)
         self.deadline_dropped_total = 0  # runtime cutoffs (at the barrier)
+        # breakdowns for summary(): why clients never landed (exclusion
+        # reason buckets + runtime "deadline" cutoffs), and where the
+        # simulated seconds went — maintained unconditionally (cheap),
+        # mirrored into tracer metrics when tracing is on
+        self.drop_reasons: dict[str, int] = {}
+        self.phase_s = {"downlink": 0.0, "barrier": 0.0, "drain": 0.0}
         self.history: list[dict] = []
         self.decisions: list[RoundDecision] = []
         # one verdict per decision (None when no finite deadline applies);
@@ -182,6 +194,22 @@ class EdgeRuntime:
         with ``state.est.clients``."""
         self.decisions.append(decision)
         self.dropped_total += len(decision.excluded)
+        rid = len(self.decisions) - 1
+        for reason in decision.excluded.values():
+            key = f"excluded:{reason_key(reason)}"
+            self.drop_reasons[key] = self.drop_reasons.get(key, 0) + 1
+        tr = self.tracer
+        if tr.enabled:
+            for cid, reason in decision.excluded.items():
+                tr.metrics.counter("excluded_total").inc(
+                    1, reason=reason_key(reason), policy=self.policy.name)
+            for cid, a in decision.allocations.items():
+                tr.event(obs.ALLOCATE, obs.CAT_CLIENT, self.clock.now,
+                         round_id=rid, client=int(cid),
+                         bandwidth_hz=float(a.bandwidth_hz),
+                         deadline_s=(float(a.deadline_s)
+                                     if np.isfinite(a.deadline_s) else None),
+                         codec=(None if a.codec is None else a.codec.spec()))
         sel = decision.selected
         if not sel:
             self.verdicts.append(None)
@@ -221,9 +249,19 @@ class EdgeRuntime:
             return
         t_comp = fl_sel / np.maximum(self.fleet.flops_per_s[c], 1.0)
         verdict = enforce_deadlines(c, est_sel.time_s, t_comp, d_eff,
-                                    self.cfg.deadline_tolerance_s)
+                                    self.cfg.deadline_tolerance_s,
+                                    tracer=self.tracer, t0=self.clock.now,
+                                    round_id=len(self.decisions) - 1)
         decision.dropped.update(verdict.reasons())
         self.deadline_dropped_total += verdict.n_dropped
+        if verdict.n_dropped:
+            self.drop_reasons["deadline_cutoff"] = (
+                self.drop_reasons.get("deadline_cutoff", 0)
+                + verdict.n_dropped)
+            if self.tracer.enabled:
+                self.tracer.metrics.counter("drops_total").inc(
+                    verdict.n_dropped, reason="deadline",
+                    policy=self.policy.name)
         self.verdicts.append(verdict)
         self._verdict = verdict
 
@@ -347,6 +385,8 @@ class EdgeRuntime:
         nonagg = nonagg * frac
         # a client is active until min(its finish, its deadline)
         active = np.minimum(est_sel.time_s, deadlines)
+        t_comp = (verdict.t_comp_s if verdict is not None
+                  else est_sel.time_s - self.channel.uplink_time_s(up, c))
         if self.channel.cfg.topology == "tree":
             fl_t = np.minimum(est_sel.time_s
                               - self.channel.uplink_time_s(up, c), deadlines)
@@ -359,6 +399,13 @@ class EdgeRuntime:
             barrier = self.clock.round_time(est_sel.time_s, cap_s=deadlines)
             t_round = max(barrier,
                           self.channel.comm_round_time_split(agg, nonagg, c))
+        t0 = self.clock.now
+        self.phase_s["downlink"] += t_down
+        self.phase_s["barrier"] += barrier
+        self.phase_s["drain"] += max(t_round - barrier, 0.0)
+        if self.tracer.enabled:
+            self._trace_sync_round(t0, t_down, t_round, barrier, c, t_comp,
+                                   active, verdict)
         self.clock.advance(t_down + t_round)
         # synchronous barrier: a client that finishes early (or was cut
         # off) sits idle until the round closes, draining idle_power_w
@@ -372,9 +419,52 @@ class EdgeRuntime:
         spend_j = spend_j + self.fleet.cfg.idle_power_w * idle_s
         e = float(spend_j.sum())
         self.fleet.spend(c, spend_j)
+        if self.tracer.enabled:
+            self._meter_energy(c, e)
         landed = c if verdict is None else c[~verdict.dropped]
         return self._record(t_down + t_round, e, landed,
                             dropped=n_dropped, barrier_s=barrier)
+
+    def _trace_sync_round(self, t0: float, t_down: float, t_round: float,
+                          barrier: float, c: np.ndarray, t_comp: np.ndarray,
+                          active: np.ndarray,
+                          verdict: Optional[DeadlineVerdict]) -> None:
+        """Emit the round's span tree on the simulated timeline: the
+        round envelope, the shared downlink, per-client compute+uplink
+        children (uplink truncated at any enforced cutoff), and the
+        aggregation drain past the barrier.  One client's span durations
+        sum to its active time min(finish, deadline), so under star
+        topology max_k Σ durations == the recorded ``barrier_s``."""
+        tr = self.tracer
+        rid = len(self.decisions) - 1
+        tr.span(obs.ROUND, obs.CAT_ROUND, t0, t0 + t_down + t_round,
+                round_id=rid, cohort=int(c.size))
+        if t_down > 0:
+            tr.span(obs.DOWNLINK, obs.CAT_ROUND, t0, t0 + t_down,
+                    round_id=rid)
+        start = t0 + t_down
+        tr.metrics.histogram("barrier_s").observe(barrier)
+        for phase, dt in (("downlink", t_down), ("barrier", barrier),
+                          ("drain", max(t_round - barrier, 0.0))):
+            tr.metrics.counter("phase_s_total").inc(dt, phase=phase)
+        for j, cl in enumerate(c):
+            cl = int(cl)
+            comp_end = start + min(float(t_comp[j]), float(active[j]))
+            tr.span(obs.COMPUTE, obs.CAT_CLIENT, start, comp_end,
+                    round_id=rid, client=cl)
+            tr.span(obs.UPLINK, obs.CAT_CLIENT, comp_end,
+                    start + float(active[j]), round_id=rid, client=cl,
+                    dropped=(bool(verdict.dropped[j])
+                             if verdict is not None else False))
+        tr.span(obs.AGGREGATE, obs.CAT_ROUND, start + barrier,
+                t0 + t_down + t_round, round_id=rid)
+
+    def _meter_energy(self, c: np.ndarray, spent_j: float) -> None:
+        m = self.tracer.metrics
+        m.counter("energy_j_total").inc(spent_j)
+        for cl in c:
+            m.gauge("battery_j").set(float(self.fleet.battery_j[int(cl)]),
+                                     client=int(cl))
 
     def dispatch_async(self, est_sel: ClientEstimate, n_samples, payloads,
                        down_bytes: float) -> None:
@@ -417,6 +507,10 @@ class EdgeRuntime:
                                              self.channel.cfg.tx_power_w)
         self.fleet.spend(est_sel.clients, spend_j)
         self.energy_j += float(spend_j.sum())
+        tr = self.tracer
+        if tr.enabled:
+            self._meter_energy(est_sel.clients, float(spend_j.sum()))
+        rid = len(self.decisions) - 1
         j = 0
         for i, cl in enumerate(est_sel.clients):
             cl = int(cl)
@@ -428,7 +522,17 @@ class EdgeRuntime:
                 expires = self.clock.now + float(verdict.deadline_s[i])
                 self._expiry[cl] = expires
                 self.clock.push(expires, kind=DEADLINE_EXPIRED, client=cl)
+                if tr.enabled:
+                    tr.event(obs.EXPIRE, obs.CAT_ASYNC, expires,
+                             round_id=rid, client=cl,
+                             deadline_s=float(verdict.deadline_s[i]),
+                             tx_frac=float(verdict.tx_frac[i]))
             else:
+                if tr.enabled:
+                    tr.event(obs.DISPATCH, obs.CAT_ASYNC, self.clock.now,
+                             round_id=rid, client=cl,
+                             eta_s=float(est_sel.time_s[i]),
+                             version=self.async_agg.version)
                 self.async_agg.submit(cl, float(est_sel.time_s[i]),
                                       float(np.asarray(n_samples)[j]),
                                       payloads[j])
@@ -478,6 +582,11 @@ class EdgeRuntime:
         if barrier_s is not None:
             rec["barrier_s"] = float(barrier_s)
         self.history.append(rec)
+        if self.tracer.enabled:
+            rec_t = dict(rec)
+            rec_t["round_id"] = len(self.history) - 1
+            self.tracer.record_round(rec_t)
+            self.tracer.metrics.histogram("cohort_size").observe(len(clients))
         return rec
 
     def summary(self) -> dict:
@@ -489,4 +598,8 @@ class EdgeRuntime:
             "deadline_dropped_total": self.deadline_dropped_total,
             "depleted_clients": int((self.fleet.battery_j <= 0).sum()),
             "in_flight": 0 if self.async_agg is None else self.async_agg.in_flight,
+            # why clients never landed, and where the simulated seconds
+            # went — maintained whether or not a tracer is attached
+            "drop_reasons": dict(self.drop_reasons),
+            "phase_s": dict(self.phase_s),
         }

@@ -267,6 +267,17 @@ def make(spec) -> PayloadCodec:
         raise ValueError(f"bad codec spec {spec!r}: {e}") from None
 
 
+def achieved_ratio(codec: PayloadCodec, n_floats: float) -> float:
+    """Achieved wire compression: ``wire_bytes / raw float32 bytes`` for
+    an ``n_floats``-element payload (1.0 = uncompressed; the obs
+    ``codec_ratio`` gauge).  An empty payload compresses to nothing —
+    ratio 1.0 by convention."""
+    raw = float(n_floats) * comm.BYTES_F32
+    if raw <= 0:
+        return 1.0
+    return float(codec.wire_bytes(n_floats)) / raw
+
+
 register("none", NoneCodec)
 register("int8", Int8Codec)
 register("topk", TopKCodec)

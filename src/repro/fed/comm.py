@@ -42,13 +42,17 @@ class CommLedger:
     scalar_bytes: float = 0.0        # Gram-matrix / m² scalar exchanges
     rounds: int = 0
 
-    def broadcast(self, n_floats: int, n_clients: int) -> None:
-        # one multicast payload counted once per client link
-        self.down_bytes += n_floats * BYTES_F32 * n_clients
+    def broadcast(self, n_floats: int, n_clients: int) -> float:
+        # one multicast payload counted once per client link; returns the
+        # bytes added so callers (the obs metrics layer) can mirror the
+        # ledger without re-deriving its rules
+        added = n_floats * BYTES_F32 * n_clients
+        self.down_bytes += added
+        return added
 
     def upload(self, n_floats: float, n_clients: int,
                bytes_per_el: int = BYTES_F32, aggregatable: bool = True,
-               wire_bytes: float | None = None) -> None:
+               wire_bytes: float | None = None) -> tuple[float, float]:
         """A per-client upload of ``n_floats`` elements.
 
         ``wire_bytes`` overrides the linear ``n_floats * bytes_per_el``
@@ -60,19 +64,27 @@ class CommLedger:
         any single node forwards at most ceil(log2 k) payloads of size d.
         aggregatable=False (FedAvg-style distinct local models the server
         must see individually): the tree carries every payload to the root,
-        no gain over star."""
+        no gain over star.
+
+        Returns the ``(star, tree)`` bytes added, so the obs metrics
+        layer mirrors the ledger exactly without re-deriving its rules."""
         if n_clients <= 0:
-            return  # nobody transmitted: the tree depth floor must not bill
+            # nobody transmitted: the tree depth floor must not bill
+            return 0.0, 0.0
         payload = (float(wire_bytes) if wire_bytes is not None
                    else n_floats * bytes_per_el)
-        self.up_star_bytes += payload * n_clients
+        d_star = payload * n_clients
         if aggregatable:
             depth = max(1, math.ceil(math.log2(max(n_clients, 2))))
-            self.up_tree_bytes += payload * depth
+            d_tree = payload * depth
         else:
-            self.up_tree_bytes += payload * n_clients
+            d_tree = payload * n_clients
+        self.up_star_bytes += d_star
+        self.up_tree_bytes += d_tree
+        return d_star, d_tree
 
-    def upload_per_client(self, wire_bytes, aggregatable: bool = True) -> None:
+    def upload_per_client(self, wire_bytes,
+                          aggregatable: bool = True) -> tuple[float, float]:
         """Per-client uploads whose wire sizes DIFFER (per-client codecs,
         e.g. the adaptive_codec allocation policy).  ``wire_bytes`` is a
         sequence of per-client byte counts.
@@ -82,20 +94,26 @@ class CommLedger:
         traffic is bounded by the densest contribution, so the per-node
         metric bills depth × max.  tree, non-aggregatable: every payload
         reaches the root — the sum again.  With uniform sizes all three
-        reduce exactly to :meth:`upload`."""
+        reduce exactly to :meth:`upload`.  Returns the ``(star, tree)``
+        bytes added."""
         sizes = [float(b) for b in wire_bytes]
         k = len(sizes)
         if k == 0:
-            return
-        self.up_star_bytes += sum(sizes)
+            return 0.0, 0.0
+        d_star = sum(sizes)
         if aggregatable:
             depth = max(1, math.ceil(math.log2(max(k, 2))))
-            self.up_tree_bytes += depth * max(sizes)
+            d_tree = depth * max(sizes)
         else:
-            self.up_tree_bytes += sum(sizes)
+            d_tree = sum(sizes)
+        self.up_star_bytes += d_star
+        self.up_tree_bytes += d_tree
+        return d_star, d_tree
 
-    def scalars(self, n: int) -> None:
-        self.scalar_bytes += n * BYTES_F32
+    def scalars(self, n: int) -> float:
+        added = n * BYTES_F32
+        self.scalar_bytes += added
+        return added
 
     def end_round(self) -> None:
         self.rounds += 1

@@ -38,6 +38,7 @@ partitions.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -49,7 +50,14 @@ from repro.configs.paper_models import CNNConfig
 from repro.data.partition import noniid_partition
 from repro.data.synthetic import Dataset
 from repro.edge.runtime import EdgeRuntime
-from repro.fed import comm, strategies
+from repro.fed import codecs, comm, strategies
+from repro.obs import trace as obs
+
+
+def _tree_norm(tree) -> float:
+    """L2 norm over every leaf of a pytree (error-feedback residuals)."""
+    return float(np.sqrt(sum(float(jnp.vdot(leaf, leaf).real)
+                             for leaf in jax.tree.leaves(tree))))
 
 
 class FederatedRun:
@@ -57,11 +65,15 @@ class FederatedRun:
     strategy registry; everything per-algorithm lives in the strategy."""
 
     def __init__(self, model_cfg: CNNConfig, fed_cfg: FedConfig,
-                 train: Dataset, test: Dataset, algorithm: str):
+                 train: Dataset, test: Dataset, algorithm: str,
+                 tracer=None):
         self.mcfg = model_cfg
         self.fcfg = fed_cfg
         self.train, self.test = train, test
         self.algorithm = algorithm
+        # obs: spans/events/metrics/audit; the shared no-op default keeps
+        # the untraced driver free (one attribute check per site)
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.rng = np.random.default_rng(fed_cfg.seed)
         self.ledger = comm.CommLedger()
         self._qkey = jax.random.PRNGKey(fed_cfg.seed + 17)
@@ -85,7 +97,7 @@ class FederatedRun:
                     "async edge mode needs summable client payloads; "
                     f"{algorithm!r} supports sync edge simulation only")
             self.edge = EdgeRuntime(fed_cfg.edge, fed_cfg.num_clients,
-                                    fed_cfg.seed)
+                                    fed_cfg.seed, tracer=self.tracer)
             if self.edge.policy.needs_summable and not self.plan.summable:
                 raise ValueError(
                     f"allocation policy {fed_cfg.edge.scheduler!r} emits "
@@ -175,11 +187,20 @@ class FederatedRun:
         is billed only the ``tx_frac`` of its upload that was on the air
         before the cutoff (its payload never lands), and the Gram scalar
         exchange covers only the clients whose uploads did land — so
-        ledger ≤ plan, with equality iff nobody was dropped."""
+        ledger ≤ plan, with equality iff nobody was dropped.
+
+        With a tracer attached, every ledger delta is mirrored into the
+        ``bytes_wire_total`` counter (direction × topology × codec ×
+        phase labels, from the ledger's own return values — never
+        re-derived), and every upload adds a per-(round, client, phase)
+        planned-vs-billed row to the :class:`~repro.obs.metrics.PlanAudit`
+        — the plan == ledger invariant as a runtime audit."""
         n_selected = len(selected)
         if n_selected == 0:
             self.ledger.end_round()
             return
+        tr = self.tracer
+        rid = self.ledger.rounds        # 0-based: end_round not called yet
         hetero = (self._decision is not None
                   and self._decision.heterogeneous_codecs)
         verdict = self._round_verdict
@@ -192,25 +213,46 @@ class FederatedRun:
             if ph.down_floats:
                 # every selected client received the broadcast, including
                 # the ones later cut off on the uplink
-                self.ledger.broadcast(ph.down_floats, n_selected)
+                added = self.ledger.broadcast(ph.down_floats, n_selected)
+                if tr.enabled:
+                    tr.metrics.counter("bytes_wire_total").inc(
+                        added, direction="down", topology="shared",
+                        phase=ph.name, codec="none")
             if not ph.up_floats:
                 continue
             if hetero or frac:
-                wire = [(self._decision.codec_for(i) or ph.codec)
-                        .wire_bytes(ph.up_floats) * frac.get(int(i), 1.0)
-                        for i in selected]
-                self.ledger.upload_per_client(wire,
-                                              aggregatable=ph.aggregatable)
+                planned = [(self._decision.codec_for(i) or ph.codec)
+                           .wire_bytes(ph.up_floats) for i in selected]
+                billed = [w * frac.get(int(i), 1.0)
+                          for w, i in zip(planned, selected)]
+                d_star, d_tree = self.ledger.upload_per_client(
+                    billed, aggregatable=ph.aggregatable)
+                codec_label = "per_client" if hetero else ph.codec.spec()
             else:
-                self.ledger.upload(ph.up_floats, n_selected,
-                                   aggregatable=ph.aggregatable,
-                                   wire_bytes=ph.wire_up_bytes())
+                w_uniform = ph.wire_up_bytes()
+                planned = billed = [w_uniform] * n_selected
+                d_star, d_tree = self.ledger.upload(
+                    ph.up_floats, n_selected, aggregatable=ph.aggregatable,
+                    wire_bytes=w_uniform)
+                codec_label = ph.codec.spec()
+            if tr.enabled:
+                c = tr.metrics.counter("bytes_wire_total")
+                c.inc(d_star, direction="up", topology="star",
+                      phase=ph.name, codec=codec_label)
+                c.inc(d_tree, direction="up", topology="tree",
+                      phase=ph.name, codec=codec_label)
+                for i, p, b in zip(selected, planned, billed):
+                    tr.audit.add(rid, int(i), ph.name, p, b)
         n_landed = n_selected - (0 if self._decision is None
                                  else len(self._decision.dropped))
         n_scalars = (self.plan.round_scalars
                      + self.plan.scalars_per_client * n_landed)
         if n_scalars and n_landed:
-            self.ledger.scalars(n_scalars)
+            added = self.ledger.scalars(n_scalars)
+            if tr.enabled:
+                tr.metrics.counter("bytes_wire_total").inc(
+                    added, direction="scalar", topology="shared",
+                    phase="gram", codec="none")
         self.ledger.end_round()
 
     def _edge_sync_finish(self, info: dict) -> dict:
@@ -271,8 +313,29 @@ class FederatedRun:
                 codec = self._decision.codec_for(cid) or codec
             if not codec.identity:
                 self._qkey, sub = jax.random.split(self._qkey)
-                payload, res = self.strategy.compress_payload(
-                    payload, sub, self._ef_residual.get(cid), codec=codec)
+                if self.tracer.enabled:
+                    # wall-clock encode cost + achieved ratio live in the
+                    # metrics registry only — never on the sim timeline,
+                    # so traced replays stay deterministic
+                    t0 = time.perf_counter()
+                    payload, res = self.strategy.compress_payload(
+                        payload, sub, self._ef_residual.get(cid),
+                        codec=codec)
+                    payload = jax.block_until_ready(payload)
+                    m = self.tracer.metrics
+                    m.histogram("codec_encode_s").observe(
+                        time.perf_counter() - t0, codec=codec.spec())
+                    n_up = sum(ph.up_floats for ph in self.plan.phases)
+                    m.gauge("codec_ratio").set(
+                        codecs.achieved_ratio(codec, n_up),
+                        codec=codec.spec())
+                    if res is not None:
+                        m.gauge("ef_residual_norm").set(_tree_norm(res),
+                                                        client=int(cid))
+                else:
+                    payload, res = self.strategy.compress_payload(
+                        payload, sub, self._ef_residual.get(cid),
+                        codec=codec)
                 if res is not None:
                     self._ef_residual[cid] = res
             payloads.append(payload)
@@ -312,20 +375,23 @@ class FederatedRun:
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 5,
             target_accuracy: Optional[float] = None, verbose: bool = False):
+        """Drive ``rounds`` federated rounds, evaluating every
+        ``eval_every``.  Per-round progress goes through the tracer's
+        structured log (``log_round``): with the default NULL_TRACER the
+        record is rendered to stdout when ``verbose`` (byte-compatible
+        with the old progress print); a real ``Tracer`` additionally
+        keeps every record for export."""
         rounds = rounds or self.fcfg.rounds
         history = []
         for t in range(rounds):
             info = self.round()
-            if (t + 1) % eval_every == 0 or t == rounds - 1:
-                info["accuracy"] = self.evaluate()
-                if verbose:
-                    print(f"round {t+1:4d} "
-                          f"loss {info.get('loss', float('nan')):.4f} "
-                          f"acc {info['accuracy']:.4f}")
-                if target_accuracy and info["accuracy"] >= target_accuracy:
-                    info["round"] = t + 1
-                    history.append(info)
-                    return history
             info["round"] = t + 1
+            is_eval = (t + 1) % eval_every == 0 or t == rounds - 1
+            if is_eval:
+                info["accuracy"] = self.evaluate()
+            self.tracer.log_round(info, render=verbose and is_eval)
             history.append(info)
+            if (is_eval and target_accuracy
+                    and info["accuracy"] >= target_accuracy):
+                return history
         return history

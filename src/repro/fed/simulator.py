@@ -104,8 +104,14 @@ def from_strategy(strategy):
 
 
 def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
-              compress=None):
+              compress=None, tracer=None):
     """Wrap a jitted ``round_step`` with the edge cost model.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) attaches observability
+    to the given ``edge`` runtime — round/client spans on the simulated
+    timeline, byte/energy/drop metrics — exactly as passing the tracer to
+    ``EdgeRuntime(...)`` directly would; the kwarg exists so callers who
+    received an already-built runtime can still trace it.
 
     The vmapped cohort is the selected client set; after the device-side
     step, the wrapper advances the edge clock by the synchronous-round
@@ -139,6 +145,10 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
     path round-trips every client through the one run codec, and billing
     wire formats the payloads never saw is the divergence this layer
     exists to forbid."""
+    if tracer is not None:
+        edge.tracer = tracer
+        if edge.async_agg is not None:
+            edge.async_agg.tracer = tracer
     step_codec = getattr(round_step, "codec", codecs.NONE)
     codec = step_codec if compress is None else codecs.make(compress)
     if codec.spec() != step_codec.spec():

@@ -1,0 +1,363 @@
+"""repro.obs: tracing, metrics, exporters, and the plan==ledger audit.
+
+Locks the PR-6 observability contracts:
+
+  * trace round-trip — record -> JSONL -> parse reproduces every span /
+    event / record / log;
+  * metrics mirror the authorities — ``bytes_wire_total`` sums equal the
+    CommLedger fields exactly (the counters are fed from the ledger's
+    own return deltas), energy/barrier/cohort metrics reconcile with
+    ``EdgeRuntime.history``;
+  * drop accounting reconciles — drops_total == Σ RoundDecision.dropped
+    == deadline_dropped_total == Σ history drops, and the audit's
+    shortfall rows are exactly the dropped clients' uploads;
+  * the Chrome trace export is schema-valid trace-event JSON, and under
+    star topology the slowest client's compute+uplink span durations sum
+    to the recorded round barrier;
+  * determinism — two traced same-seed runs serialize to bit-identical
+    JSONL, and a traced run's sim fingerprint equals the untraced one
+    (tracing reads no RNG and perturbs nothing);
+  * the structured per-round log renders byte-compatibly with the old
+    ``FederatedRun.run`` progress print.
+
+Reuses the config constants from ``test_determinism`` so the tracer is
+exercised on exactly the harness whose replays it must not perturb.
+"""
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import FedConfig
+from repro.edge import EdgeConfig
+from repro.fed.server import FederatedRun
+from repro.obs.export import write_bench_json
+
+from test_determinism import HETERO, MCFG, TEST, TRAIN, UPLINK, _fingerprint
+
+ROUNDS = 2
+
+
+def _build(tracer=None, alg="fedavg_sgd", policy="uniform", seed=0,
+           compress="none", **edge_kw):
+    kw = dict(channel=UPLINK, device=HETERO, scheduler=policy,
+              deadline_s=5.0, min_clients=1, enforce_deadline_s=1.5)
+    kw.update(edge_kw)
+    edge = EdgeConfig(**kw)
+    fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                     batch_size=32, rounds=ROUNDS, noniid_l=2, seed=seed,
+                     compress=compress, edge=edge)
+    return FederatedRun(MCFG, fcfg, TRAIN, TEST, alg, tracer=tracer)
+
+
+def _traced(**kw):
+    tracer = obs.Tracer(sink=lambda line: None)
+    run = _build(tracer=tracer, **kw)
+    run.run(rounds=ROUNDS, eval_every=ROUNDS)
+    return run, tracer
+
+
+@pytest.fixture(scope="module")
+def sync_run():
+    """One traced sync run under an enforced deadline (drops occur)."""
+    return _traced()
+
+
+@pytest.fixture(scope="module")
+def async_run():
+    return _traced(mode="async", buffer_size=2)
+
+
+# ---------------------------------------------------------------------------
+# trace round-trip
+# ---------------------------------------------------------------------------
+def test_jsonl_roundtrip(sync_run):
+    _, tracer = sync_run
+    text = obs.to_jsonl(tracer)
+    parsed = obs.parse_jsonl(text)
+    assert len(parsed["spans"]) == len(
+        [s for s in tracer.spans if s.cat != obs.CAT_WALL])
+    assert len(parsed["events"]) == len(tracer.events)
+    assert len(parsed["records"]) == len(tracer.records) == ROUNDS
+    assert len(parsed["logs"]) == len(tracer.logs) == ROUNDS
+    # spot-check full-fidelity round-trip of one span and one event
+    s0, p0 = tracer.spans[0], parsed["spans"][0]
+    assert (s0.name, s0.cat, s0.round_id, s0.client) == \
+        (p0.name, p0.cat, p0.round_id, p0.client)
+    assert s0.t0 == p0.t0 and s0.t1 == p0.t1 and s0.args == p0.args
+    e0, q0 = tracer.events[0], parsed["events"][0]
+    assert (e0.name, e0.cat, e0.t, e0.round_id, e0.client, e0.args) == \
+        (q0.name, q0.cat, q0.t, q0.round_id, q0.client, q0.args)
+
+
+# ---------------------------------------------------------------------------
+# metrics mirror the authorities
+# ---------------------------------------------------------------------------
+def _counter_sum(tracer, name, **match):
+    c = tracer.metrics.get(name)
+    return sum(v for labels, v in c.items()
+               if all(labels.get(k) == w for k, w in match.items()))
+
+
+def test_bytes_metric_equals_ledger(sync_run):
+    run, tracer = sync_run
+    led = run.ledger
+    tol = 1e-6 * max(led.up_star_bytes, 1.0)
+    assert abs(_counter_sum(tracer, "bytes_wire_total", direction="up",
+                            topology="star") - led.up_star_bytes) < tol
+    assert abs(_counter_sum(tracer, "bytes_wire_total", direction="up",
+                            topology="tree") - led.up_tree_bytes) < tol
+    assert abs(_counter_sum(tracer, "bytes_wire_total", direction="down")
+               - led.down_bytes) < tol
+    assert abs(_counter_sum(tracer, "bytes_wire_total", direction="scalar")
+               - led.scalar_bytes) < tol
+
+
+def test_energy_and_round_metrics_match_history(sync_run):
+    run, tracer = sync_run
+    hist = run.edge.history
+    energy = tracer.metrics.get("energy_j_total").total()
+    assert abs(energy - run.edge.energy_j) < 1e-9 * max(run.edge.energy_j, 1)
+    assert tracer.metrics.get("cohort_size").total_count() == len(hist)
+    barriers = [h["barrier_s"] for h in hist if "barrier_s" in h]
+    bh = tracer.metrics.get("barrier_s")
+    assert bh.total_count() == len(barriers)
+    assert abs(bh.total_sum() - sum(barriers)) < 1e-9
+    # phase seconds mirror the runtime's unconditional breakdown
+    for phase, secs in run.edge.phase_s.items():
+        assert abs(tracer.metrics.get("phase_s_total").value(phase=phase)
+                   - secs) < 1e-9
+    # per-round records match history one-to-one
+    for rid, (rec, h) in enumerate(zip(tracer.records, hist)):
+        assert rec["round_id"] == rid
+        assert rec["cohort"] == h["cohort"]
+        assert rec["clock_s"] == h["clock_s"]
+
+
+def test_battery_gauge_matches_fleet(sync_run):
+    run, tracer = sync_run
+    g = tracer.metrics.get("battery_j")
+    for labels, v in g.items():
+        assert v == pytest.approx(
+            float(run.edge.fleet.battery_j[labels["client"]]))
+
+
+# ---------------------------------------------------------------------------
+# drop accounting reconciles end to end
+# ---------------------------------------------------------------------------
+def test_drop_counts_reconcile(sync_run):
+    run, tracer = sync_run
+    decision_drops = sum(len(d.dropped) for d in run.edge.decisions)
+    assert decision_drops > 0, "harness must exercise the cutoff path"
+    assert run.edge.deadline_dropped_total == decision_drops
+    assert sum(h["dropped"] for h in run.edge.history) == decision_drops
+    assert tracer.metrics.get("drops_total").total() == decision_drops
+    assert run.edge.drop_reasons.get("deadline_cutoff", 0) == decision_drops
+    assert run.edge.summary()["drop_reasons"] == run.edge.drop_reasons
+    # every dropped client carries a VERDICT event with dropped=True
+    dropped_events = [e for e in tracer.events_named(obs.VERDICT)
+                      if e.args["dropped"]]
+    assert len(dropped_events) == decision_drops
+    for e in dropped_events:
+        assert 0.0 <= e.args["tx_frac"] < 1.0
+        assert e.args["finish_s"] > e.args["deadline_s"]
+
+
+def test_excluded_counter_matches_policy(sync_run):
+    run, tracer = sync_run
+    excluded = sum(len(d.excluded) for d in run.edge.decisions)
+    if excluded:
+        assert tracer.metrics.get("excluded_total").total() == excluded
+    # a-priori exclusions and runtime cutoffs live in separate buckets
+    assert all(k == "deadline_cutoff" or k.startswith("excluded:")
+               for k in run.edge.drop_reasons)
+
+
+def test_plan_audit_verifies_and_isolates_shortfall(sync_run):
+    run, tracer = sync_run
+    tracer.audit.verify(run.ledger)  # billed == ledger star actuals
+    assert tracer.audit.billed_total() == pytest.approx(
+        run.ledger.up_star_bytes)
+    # shortfall rows are exactly the dropped clients' uploads
+    dropped_by_round = {}
+    for rid, d in enumerate(run.edge.decisions):
+        for cid in d.dropped:
+            dropped_by_round.setdefault(rid, set()).add(int(cid))
+    n_phases = sum(1 for ph in run.plan.phases if ph.up_floats)
+    short = tracer.audit.shortfall_rows()
+    assert len(short) == sum(map(len, dropped_by_round.values())) * n_phases
+    for row in short:
+        assert row.client in dropped_by_round[row.round_id]
+        assert row.billed_bytes < row.planned_bytes
+
+
+# ---------------------------------------------------------------------------
+# Chrome export: schema + the span-sum == barrier acceptance invariant
+# ---------------------------------------------------------------------------
+def test_chrome_trace_schema(sync_run):
+    _, tracer = sync_run
+    doc = obs.to_chrome(tracer)
+    json.dumps(doc)  # JSON-serializable end to end
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    names = set()
+    for e in evs:
+        assert e["ph"] in ("X", "i", "M")
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0 and "ts" in e
+        elif e["ph"] == "i":
+            assert e["s"] == "t" and "ts" in e
+        else:
+            names.add((e["name"], e["pid"], e["tid"]))
+    # process + per-client thread metadata for the Perfetto track names
+    assert ("process_name", 1, 0) in names
+    assert ("thread_name", 1, 0) in names
+
+
+def test_client_span_sums_equal_barrier(sync_run):
+    """Star topology: barrier == max_k min(finish_k, deadline_k), and a
+    client's compute+uplink spans tile exactly [round_start+t_down,
+    +active_k] — so the slowest client's span durations sum to the
+    recorded barrier (the PR's acceptance criterion)."""
+    run, tracer = sync_run
+    checked = 0
+    for rec in tracer.records:
+        if "barrier_s" not in rec:
+            continue
+        rid = rec["round_id"]
+        clients = {s.client for s in tracer.spans_for(rid, obs.CAT_CLIENT)
+                   if s.client >= 0}
+        assert clients
+        per_client = [sum(s.dur
+                          for s in tracer.spans_for(rid, obs.CAT_CLIENT, k)
+                          if s.name in (obs.COMPUTE, obs.UPLINK))
+                      for k in clients]
+        assert max(per_client) == pytest.approx(rec["barrier_s"], rel=1e-9)
+        checked += 1
+    assert checked == ROUNDS
+
+
+def test_round_span_tiles_phases(sync_run):
+    """round span == downlink + barrier + drain; child spans nest."""
+    _, tracer = sync_run
+    for rid in range(ROUNDS):
+        round_spans = [s for s in tracer.spans_for(rid, obs.CAT_ROUND)
+                       if s.name == obs.ROUND]
+        assert len(round_spans) == 1
+        env = round_spans[0]
+        for s in tracer.spans_for(rid):
+            if s.cat == obs.CAT_WALL:
+                continue
+            assert s.t0 >= env.t0 - 1e-12 and s.t1 <= env.t1 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# determinism: traced replays identical; tracing perturbs nothing
+# ---------------------------------------------------------------------------
+def test_traced_replays_bit_identical():
+    _, ta = _traced()
+    _, tb = _traced()
+    assert obs.to_jsonl(ta) == obs.to_jsonl(tb)
+
+
+def test_tracing_does_not_perturb_the_sim(sync_run):
+    traced_run, _ = sync_run
+    untraced = _build()
+    untraced.run(rounds=ROUNDS, eval_every=ROUNDS)
+    assert _fingerprint(traced_run) == _fingerprint(untraced)
+
+
+# ---------------------------------------------------------------------------
+# structured per-round log
+# ---------------------------------------------------------------------------
+def test_console_render_matches_legacy_print(capsys):
+    run = _build()  # NULL_TRACER: verbose must still print, same bytes
+    run.run(rounds=ROUNDS, eval_every=ROUNDS, verbose=True)
+    out = capsys.readouterr().out.splitlines()
+    assert len(out) == 1
+    assert re.fullmatch(
+        r"round +\d+ loss (\d+\.\d{4}|nan) acc \d\.\d{4}", out[0]), out[0]
+
+
+def test_tracer_sink_and_log_records():
+    lines = []
+    tracer = obs.Tracer(sink=lines.append)
+    run = _build(tracer=tracer)
+    run.run(rounds=ROUNDS, eval_every=ROUNDS, verbose=True)
+    assert len(lines) == 1 and lines[0].startswith(f"round    {ROUNDS} ")
+    assert [rec["round"] for rec in tracer.logs] == [1, 2]
+    assert "accuracy" in tracer.logs[-1]
+
+
+# ---------------------------------------------------------------------------
+# async events
+# ---------------------------------------------------------------------------
+def test_async_dispatch_land_expire(async_run):
+    run, tracer = async_run
+    dispatches = tracer.events_named(obs.DISPATCH)
+    lands = tracer.events_named(obs.LAND)
+    expires = tracer.events_named(obs.EXPIRE)
+    assert dispatches, "async run must dispatch"
+    # a DISPATCH is emitted per surviving submit; each either LANDs or is
+    # still in flight.  Verdict-dropped submits get an EXPIRE instead.
+    assert len(dispatches) == len(lands) + run.edge.async_agg.in_flight
+    assert len(expires) == run.edge.deadline_dropped_total
+    staleness = tracer.metrics.get("async_staleness")
+    assert staleness.total_count() == len(lands)
+    for e in lands:
+        assert e.args["staleness"] >= 0
+    for e in expires:
+        assert 0.0 <= e.args["tx_frac"] < 1.0
+    tracer.audit.verify(run.ledger)
+
+
+# ---------------------------------------------------------------------------
+# codec metrics
+# ---------------------------------------------------------------------------
+def test_codec_metrics_recorded():
+    run, tracer = _traced(compress="topk:0.1")
+    enc = tracer.metrics.get("codec_encode_s")
+    assert enc.total_count() > 0
+    ratio = tracer.metrics.get("codec_ratio").value(codec="topk:0.1")
+    assert ratio == pytest.approx(0.2, rel=0.01)  # 8B per kept of 40B raw
+    norms = tracer.metrics.get("ef_residual_norm").items()
+    assert norms and all(v >= 0 for _, v in norms)
+    tracer.audit.verify(run.ledger)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json emitter
+# ---------------------------------------------------------------------------
+def test_bench_json_schema(tmp_path):
+    rows = [["fim_diag", 12.5, np.float64(3.25)], ["gram", 40.0, "1.1GB/s"]]
+    path = write_bench_json("unit", rows, header=["name", "us", "derived"],
+                            meta={"quick": True}, root=str(tmp_path))
+    with open(path) as f:
+        doc = json.load(f)
+    assert path.endswith("BENCH_unit.json")
+    assert doc["name"] == "unit"
+    assert doc["header"] == ["name", "us", "derived"]
+    assert doc["rows"][0] == ["fim_diag", 12.5, 3.25]  # numpy -> JSON scalar
+    assert doc["meta"] == {"quick": True}
+    assert isinstance(doc["git_rev"], str) and doc["git_rev"]
+    assert "T" in doc["timestamp"]
+
+
+# ---------------------------------------------------------------------------
+# NullTracer is inert
+# ---------------------------------------------------------------------------
+def test_null_tracer_records_nothing():
+    t = obs.NULL_TRACER
+    t.span("x", obs.CAT_ROUND, 0.0, 1.0)
+    t.event("y", obs.CAT_CLIENT, 0.5)
+    t.record_round({"cohort": 3})
+    t.metrics.counter("anything").inc(5.0)
+    t.audit.add(0, 1, "p", 10.0, 10.0)
+    with t.wall_span("w"):
+        pass
+    assert not t.enabled
+    assert t.metrics.counter("anything").value() == 0.0
+    assert t.audit.rows == []
