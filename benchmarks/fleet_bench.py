@@ -1,0 +1,161 @@
+"""Fleet engine benchmark: the struct-of-arrays sync-round hot path at
+10³–10⁶-client populations (repro.edge.fleet).
+
+Part A — dict path vs fleet fast path at 10⁴ clients on the SAME config
+and seed.  ``EdgeConfig.fleet`` only switches the implementation — the
+decide → allocate → verdict → commit round is bit-identical (see
+tests/test_determinism.py) — so the whole delta is wall time.  Full mode
+asserts the fleet path is ≥ 10× faster per round; ``--smoke`` (the CI
+lane) asserts a looser 5× plus an absolute per-round wall bound.
+
+Part B — the ``FleetEngine`` jit backend (fused x64 lax kernels) swept
+over population sizes, full participation, deadline enforcement on: in
+full mode the top scale is a **10⁶-client round**.  The first round is
+reported separately as compile+run; steady-state rounds are the metric.
+
+Emits ``BENCH_fleet.json`` (benchmarks/common.emit_json) — the tracked
+perf-trajectory artifact CI archives per commit.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py [--smoke]
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit_json  # noqa: E402  (inserts src/ on path)
+
+from repro.edge import (ChannelConfig, DeviceConfig,  # noqa: E402
+                        EdgeConfig, EdgeRuntime, FleetEngine)
+
+# the determinism-suite uplink/fleet, scaled to a shared server slice
+# that keeps the drain term visible at mega-scale
+UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+                       fading="rayleigh", server_rate_bps=50e6)
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+UP_BYTES = 80_000.0     # ~a 10k-param grad+FIM payload at f32
+DOWN_BYTES = 40_000.0
+FLOPS = 1e9             # per-client local step
+
+
+def _cfg(policy: str, fleet: str = "on", backend: str = "exact") -> EdgeConfig:
+    # enforce cuts the lognormal compute tail (~a few % of the cohort),
+    # not the equalized bandwidth_opt barrier itself
+    return EdgeConfig(channel=UPLINK, device=HETERO, scheduler=policy,
+                      deadline_s=5.0, min_clients=1, enforce_deadline_s=3.0,
+                      fleet=fleet, fleet_backend=backend)
+
+
+def _drive_dict(cfg: EdgeConfig, pop: int, k: int, rounds: int,
+                seed: int = 0):
+    """The per-client dict path: an EdgeRuntime with the fleet fast path
+    forced off, driven round-by-round exactly as FleetEngine's exact
+    backend drives its internal runtime."""
+    rt = EdgeRuntime(dataclasses.replace(cfg, fleet="off"), pop, seed=seed)
+
+    def wire(codec=None):
+        return (UP_BYTES, 0.0)
+
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        _, est, _ = rt.decide(k, np.arange(pop), wire, FLOPS, summable=True)
+        rt.finish_round_sync(est, UP_BYTES, DOWN_BYTES, aggregatable=True)
+    dt = time.perf_counter() - t0
+    return dt / rounds, rt
+
+
+def _drive_fleet(cfg: EdgeConfig, pop: int, k: int, rounds: int,
+                 backend: str, seed: int = 0):
+    eng = FleetEngine(cfg, pop, up_bytes=UP_BYTES, flops=FLOPS,
+                      down_bytes=DOWN_BYTES, seed=seed, backend=backend)
+    # round 0 separately: on the jit backend it includes XLA compilation
+    t0 = time.perf_counter()
+    eng.run_round(k)
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds - 1):
+        eng.run_round(k)
+    steady_s = ((time.perf_counter() - t0) / (rounds - 1)
+                if rounds > 1 else first_s)
+    return first_s, steady_s, eng
+
+
+def run(smoke: bool = False):
+    rows, header = [], ["part", "backend", "policy", "population", "cohort",
+                       "rounds", "round_ms", "first_round_ms", "clock_s",
+                       "energy_j", "dropped"]
+    meta = {"mode": "smoke" if smoke else "full"}
+
+    # ---- Part A: dict vs fleet at 10^4, same config + seed -------------
+    pop_a, k_a = 10_000, 10_000
+    rounds_a = 2 if smoke else 3
+    policy = "bandwidth_opt"
+    dict_s, rt_dict = _drive_dict(_cfg(policy), pop_a, k_a, rounds_a)
+    _, fleet_s, eng = _drive_fleet(_cfg(policy), pop_a, k_a, rounds_a,
+                                   backend="exact")
+    speedup = dict_s / fleet_s
+    rows.append(["A", "dict", policy, pop_a, k_a, rounds_a, dict_s * 1e3,
+                 dict_s * 1e3, rt_dict.clock.now, rt_dict.energy_j,
+                 rt_dict.dropped_total + rt_dict.deadline_dropped_total])
+    rows.append(["A", "fleet_exact", policy, pop_a, k_a, rounds_a,
+                 fleet_s * 1e3, fleet_s * 1e3, eng.clock_s, eng.energy_j,
+                 eng.dropped_total + eng.deadline_dropped_total])
+    meta["speedup_10k"] = speedup
+    print(f"Part A: dict {dict_s*1e3:.1f} ms/round vs fleet "
+          f"{fleet_s*1e3:.1f} ms/round -> {speedup:.1f}x")
+    # both paths replay the same simulation — the speedup must be free
+    assert np.isclose(rt_dict.clock.now, eng.clock_s, rtol=1e-12), \
+        (rt_dict.clock.now, eng.clock_s)
+    assert np.isclose(rt_dict.energy_j, eng.energy_j, rtol=1e-12), \
+        (rt_dict.energy_j, eng.energy_j)
+    floor = 5.0 if smoke else 10.0
+    assert speedup >= floor, \
+        f"fleet path only {speedup:.1f}x faster at n={pop_a} (need {floor}x)"
+    if smoke:
+        # the CI wall bound: a 10^4-client fleet round stays interactive
+        assert fleet_s < 2.0, f"10^4 fleet round took {fleet_s:.2f}s"
+
+    # ---- Part B: jit backend scale sweep (full participation) ----------
+    # uniform split: finish times vary per client, so the deadline cuts
+    # the lognormal compute tail — the partial-drop / capped-spend kernel
+    # path runs at scale (bandwidth_opt's equalized barrier would make
+    # the verdict all-or-nothing)
+    pops = [1_000, 10_000] if smoke else [10_000, 100_000, 1_000_000]
+    for pop in pops:
+        rounds_b = 3 if smoke else 4
+        first_s, steady_s, eng = _drive_fleet(_cfg("uniform"), pop, pop,
+                                              rounds_b, backend="jit")
+        rows.append(["B", "fleet_jit", "uniform", pop, pop, rounds_b,
+                     steady_s * 1e3, first_s * 1e3, eng.clock_s,
+                     eng.energy_j,
+                     eng.dropped_total + eng.deadline_dropped_total])
+        print(f"Part B: n={pop:>9,d}  first {first_s*1e3:8.1f} ms  "
+              f"steady {steady_s*1e3:8.1f} ms/round  "
+              f"dropped {eng.deadline_dropped_total}")
+        assert len(eng.history) == rounds_b
+        assert eng.clock_s > 0.0 and eng.energy_j > 0.0
+    meta["max_population"] = pops[-1]
+
+    emit_json("fleet", rows, header=header, meta=meta)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: 10^4-client ceiling + wall-clock bound")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,10 @@ under the existing federated loop, converting the byte counts the
                     Allocation.deadline_s — late clients are cut off at
                     the barrier, partial uploads billed but discarded);
   * runtime.py    — EdgeConfig + EdgeRuntime gluing the above under
-                    ``FederatedRun`` and the vmapped simulator cohort path.
+                    ``FederatedRun`` and the vmapped simulator cohort path;
+  * fleet/        — struct-of-arrays mega-scale engine: the same sync
+                    round as fused array ops (vectorized policies + a
+                    jitted kernel), 10⁵–10⁶-client populations.
 
 Bandwidth allocation never changes WHAT is transmitted (the ledger is
 ground truth); per-client codecs change bytes only through their
@@ -39,9 +42,11 @@ from repro.edge.allocation import (Allocation, AllocationPolicy,
                                    AdaptiveCodecPolicy, BandwidthOptPolicy,
                                    CapacityProportionalPolicy, ClientEstimate,
                                    DeadlinePolicy, EnergyOptPolicy,
-                                   EnergyThresholdPolicy,
+                                   EnergyThresholdPolicy, FleetDecision,
+                                   FleetRoundState,
                                    RoundDecision, RoundState, UniformPolicy,
                                    make_policy)
+from repro.edge.fleet import FleetEngine, FleetState
 from repro.edge.async_agg import AsyncAggregator, staleness_weights
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet, flops_grad_fim, flops_local_sgd
@@ -63,6 +68,7 @@ __all__ = [
     "DeviceConfig", "DeviceFleet", "flops_grad_fim", "flops_local_sgd",
     "DeadlineVerdict", "Event", "EventClock", "enforce_deadlines",
     "EdgeConfig", "EdgeRuntime",
+    "FleetEngine", "FleetState", "FleetRoundState", "FleetDecision",
     "ClientEstimate",
     # legacy aliases (see edge/scheduler.py)
     "UniformScheduler", "DeadlineScheduler", "EnergyThresholdScheduler",

@@ -57,6 +57,127 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# Shared bisection core (the ONE scalar reference the fleet kernel mirrors)
+# ---------------------------------------------------------------------------
+# Both optimizing policies search a monotone scalar -> Σ widths map against
+# the shared budget: bandwidth_opt bisects the barrier T (Σ W_k(T)
+# decreasing in T), energy_opt the KKT multiplier λ (Σ max(floor, λ·√c)
+# increasing in λ).  They share one iteration count and one width/slack
+# tolerance so the vectorized fleet kernel (repro.edge.fleet.kernel) has
+# exactly one reference to mirror.
+BISECT_ITERS = 64       # bisection refinement steps (both policies)
+BISECT_EPS = 1e-12      # width / budget slack floor shared by both searches
+
+
+def bisect_budget(fn: Callable[[float], float], lo: float, hi: float,
+                  budget: float, iters: int = BISECT_ITERS,
+                  increasing: bool = False) -> float:
+    """Bisect a monotone ``fn: scalar -> Σ widths`` against ``budget`` and
+    return the feasible endpoint (``fn(x) <= budget``).  ``increasing``
+    states fn's direction: False (bandwidth_opt's barrier T — feasible at
+    large T, returns the shrunken hi), True (energy_opt's λ — feasible at
+    small λ, returns the grown lo)."""
+    lo, hi = float(lo), float(hi)
+    for _ in range(int(iters)):
+        mid = 0.5 * (lo + hi)
+        if fn(mid) <= budget:
+            lo, hi = (mid, hi) if increasing else (lo, mid)
+        else:
+            lo, hi = (lo, mid) if increasing else (mid, hi)
+    return lo if increasing else hi
+
+
+def bandwidth_opt_widths(bits: np.ndarray, s: np.ndarray, tc: np.ndarray,
+                         budget: float,
+                         iters: int = BISECT_ITERS) -> np.ndarray:
+    """Barrier-minimizing subchannel widths on the arXiv:1910.13067
+    capacity form (the bandwidth_opt objective), vectorized over the
+    cohort: W_k(T) = bits_k / (s_k · (T − t_comp,k)) with the minimal
+    feasible barrier T* pinned by Σ_k W_k(T) = budget; the final
+    bracket's slack is handed back pro rata.  This is the scalar
+    reference the jitted fleet kernel mirrors op-for-op."""
+    bits = np.asarray(bits, dtype=float)
+    s = np.asarray(s, dtype=float)
+    tc = np.asarray(tc, dtype=float)
+    budget = float(budget)
+
+    def need(T: float) -> float:
+        gap = T - tc
+        if np.any(gap <= 0.0):
+            return float("inf")
+        return float((bits / (s * gap)).sum())
+
+    lo = float(tc.max())                  # infeasible: zero air time
+    hi = max(2.0 * lo, lo + 1e-6)
+    for _ in range(200):
+        if need(hi) <= budget:
+            break
+        hi *= 2.0
+    hi = bisect_budget(need, lo, hi, budget, iters, increasing=False)
+    w = bits / (s * np.maximum(hi - tc, BISECT_EPS))
+    return w * (budget / w.sum())         # hand back the bracket slack
+
+
+def deadline_min_widths(bits: np.ndarray, s: np.ndarray, tc: np.ndarray,
+                        deadline_s: float) -> tuple[np.ndarray, np.ndarray]:
+    """(c_k, W_min,k) on the capacity form: c_k = bits_k / s_k is the
+    Hz·s each upload needs, W_min,k the narrowest subchannel that still
+    meets the deadline (inf where compute alone busts it, 0 where there
+    is nothing to send)."""
+    c = np.asarray(bits, dtype=float) / np.asarray(s, dtype=float)
+    tc = np.asarray(tc, dtype=float)
+    gap = float(deadline_s) - tc
+    w_min = np.where(gap > 0.0, c / np.maximum(gap, 1e-300), np.inf)
+    return c, np.where((c <= 0.0) & (gap > 0.0), 0.0, w_min)
+
+
+def feasible_packing(w_min: np.ndarray, tc: np.ndarray,
+                     budget: float) -> np.ndarray:
+    """Greedy ascending-W_min packing into the budget (ties broken by
+    compute time) as a vectorized prefix-sum: sorted ascending, every
+    accepted client is a prefix of the finite part, so the sequential
+    ``used + w_min <= budget`` test is exactly the running cumsum."""
+    w_min = np.asarray(w_min, dtype=float)
+    order = np.lexsort((np.asarray(tc, dtype=float), w_min))
+    used = np.cumsum(w_min[order])
+    feas = np.zeros(len(w_min), dtype=bool)
+    feas[order] = np.isfinite(w_min[order]) & (
+        used <= float(budget) * (1 + BISECT_EPS))
+    return feas
+
+
+def energy_opt_widths(c: np.ndarray, w_min: np.ndarray, feas: np.ndarray,
+                      budget: float, iters: int = BISECT_ITERS
+                      ) -> np.ndarray:
+    """Energy-minimizing KKT widths W_k = max(floor_k, √c_k / λ) with λ
+    pinned by the budget — the energy_opt allocate stage, vectorized.
+    ``feas`` marks clients whose W_min fits (floor = W_min); the rest
+    (force-keeps) floor at the equal split.  The scalar reference the
+    jitted fleet kernel mirrors op-for-op."""
+    c = np.asarray(c, dtype=float)
+    w_min = np.asarray(w_min, dtype=float)
+    budget = float(budget)
+    n = len(c)
+    w_floor = np.where(feas, w_min, budget / n)
+    total_floor = float(w_floor.sum())
+    if total_floor > budget:
+        w_floor = w_floor * (budget / total_floor)
+    sq = np.sqrt(np.maximum(c, 0.0))
+    if sq.sum() <= 0.0:                    # nothing to upload
+        w = np.maximum(w_floor, budget / n)
+    else:
+        def floored(lam: float) -> float:
+            return float(np.maximum(w_floor, lam * sq).sum())
+
+        lam = bisect_budget(floored, 0.0, budget / sq.sum(), budget, iters,
+                            increasing=True)
+        w = np.maximum(w_floor, lam * sq)
+    tot = float(w.sum())
+    if tot <= 0.0:
+        return np.full(n, budget / n)
+    return w * (budget / tot)              # hand back the bracket slack
+
 
 # ---------------------------------------------------------------------------
 # Estimates (moved from the retired edge/scheduler.py surface)
@@ -165,6 +286,20 @@ class RoundDecision:
         minus the runtime's deadline drops)."""
         return [i for i in self.allocations if i not in self.dropped]
 
+    # count views shared with FleetDecision, so driver code stays
+    # O(1)-per-decision and type-agnostic
+    @property
+    def n_selected(self) -> int:
+        return len(self.allocations)
+
+    @property
+    def n_excluded(self) -> int:
+        return len(self.excluded)
+
+    @property
+    def n_dropped(self) -> int:
+        return len(self.dropped)
+
     @property
     def heterogeneous_codecs(self) -> bool:
         return any(a.codec is not None for a in self.allocations.values())
@@ -199,6 +334,171 @@ class RoundDecision:
 
 
 # ---------------------------------------------------------------------------
+# Fleet (struct-of-arrays) twins of RoundState / RoundDecision
+# ---------------------------------------------------------------------------
+@dataclass
+class FleetRoundState:
+    """The struct-of-arrays twin of :class:`RoundState` for the fleet
+    fast path (`repro.edge.fleet`): the same per-round facts, but kept as
+    arrays over the eligible population instead of per-client dicts.
+
+    ``backend`` picks the width solver: ``"exact"`` runs the shared
+    vectorized-numpy cores above (bit-identical to the scalar dict path
+    by construction), ``"jit"`` the x64 lax kernels in
+    :mod:`repro.edge.fleet.kernel` (equal up to float-op reassociation —
+    XLA reductions are not bitwise numpy)."""
+    k: int                          # target cohort size
+    ids: np.ndarray                 # (n,) eligible (alive) client ids
+    t_comp_s: np.ndarray            # (n,) compute-only times
+    spectral_eff: np.ndarray        # (n,) bits/s/Hz under this round's fade
+    budget_hz: float                # shared round uplink bandwidth budget
+    rng: np.random.Generator
+    up_bits: float = 0.0            # 8 · (agg + nonagg) wire bytes / payload
+    payload_mult: Optional[np.ndarray] = None  # (n,) payloads per client
+    est: Optional[ClientEstimate] = None       # nominal-split estimates
+    backend: str = "exact"          # "exact" | "jit"
+
+    def mult(self) -> np.ndarray:
+        if self.payload_mult is None:
+            return np.ones(len(self.ids))
+        return np.asarray(self.payload_mult, dtype=float)
+
+
+class FleetDecision:
+    """An array-backed :class:`RoundDecision` twin: the same contract
+    (selected ids in draw order, per-client width + deadline grant, the
+    runtime's a-posteriori drops) without any per-client dict on the hot
+    path.  The dict views (``allocations`` / ``excluded`` / ``dropped``)
+    materialize lazily with the exact prose of the scalar path, so
+    fingerprints and renderers see no difference."""
+
+    def __init__(self, ids: np.ndarray, bandwidth_hz: np.ndarray,
+                 deadline_s: np.ndarray, budget_hz: float, positions=None):
+        self.ids = np.asarray(ids, dtype=int)
+        self.bandwidth_hz_arr = np.asarray(bandwidth_hz, dtype=float)
+        self.deadline_s_arr = np.asarray(deadline_s, dtype=float)
+        self.budget_hz = float(budget_hz)
+        # positions of ids within the FleetRoundState's eligible arrays
+        # (None = the identity: a fixed full-cohort decision)
+        self._positions = (None if positions is None
+                           else np.asarray(positions, dtype=int))
+        self._excluded_ids = np.asarray([], dtype=int)
+        self._excluded_reason_fn = None
+        self.excluded_bucket: Optional[str] = None
+        self._verdict = None
+        self._allocations = None
+        self._excluded = None
+        self._dropped = None
+
+    def set_excluded(self, ids, reason_fn=None, bucket=None):
+        """A-priori exclusions: ids plus a lazy ``reason_fn(position) ->
+        prose`` (materialized only if someone reads ``excluded``) and the
+        single ``reason_key`` bucket they all fall into (for O(1) drop
+        accounting at fleet scale)."""
+        self._excluded_ids = np.asarray(ids, dtype=int)
+        self._excluded_reason_fn = reason_fn
+        self.excluded_bucket = bucket
+        self._excluded = None
+        return self
+
+    def set_verdict(self, verdict):
+        """Attach the runtime's deadline verdict (fills ``dropped``)."""
+        self._verdict = verdict
+        self._dropped = None
+        return self
+
+    # --- array-facing surface (the fleet hot path) ---------------------
+    @property
+    def positions(self) -> np.ndarray:
+        if self._positions is None:
+            return np.arange(len(self.ids))
+        return self._positions
+
+    @property
+    def n_selected(self) -> int:
+        return len(self.ids)
+
+    @property
+    def n_excluded(self) -> int:
+        return len(self._excluded_ids)
+
+    @property
+    def n_dropped(self) -> int:
+        return 0 if self._verdict is None else int(self._verdict.dropped.sum())
+
+    @property
+    def drop_mask(self) -> np.ndarray:
+        """(n_selected,) True where the runtime cut the upload off."""
+        if self._verdict is None:
+            return np.zeros(len(self.ids), dtype=bool)
+        return self._verdict.dropped
+
+    # --- RoundDecision-compatible surface ------------------------------
+    @property
+    def selected(self) -> list[int]:
+        return self.ids.tolist()
+
+    @property
+    def survivors(self) -> list[int]:
+        if self._verdict is None:
+            return self.ids.tolist()
+        return self.ids[~self._verdict.dropped].tolist()
+
+    @property
+    def heterogeneous_codecs(self) -> bool:
+        return False     # the fleet path schedules widths, never codecs
+
+    @property
+    def allocations(self) -> dict[int, Allocation]:
+        if self._allocations is None:
+            self._allocations = {
+                int(i): Allocation(bandwidth_hz=float(w), deadline_s=float(d))
+                for i, w, d in zip(self.ids, self.bandwidth_hz_arr,
+                                   self.deadline_s_arr)}
+        return self._allocations
+
+    @property
+    def excluded(self) -> dict[int, str]:
+        if self._excluded is None:
+            fn = self._excluded_reason_fn or (lambda j: "excluded")
+            self._excluded = {int(c): fn(j)
+                              for j, c in enumerate(self._excluded_ids)}
+        return self._excluded
+
+    @property
+    def dropped(self) -> dict[int, str]:
+        if self._dropped is None:
+            self._dropped = ({} if self._verdict is None
+                             else self._verdict.reasons())
+        return self._dropped
+
+    def bandwidth(self, ids=None) -> np.ndarray:
+        if ids is None:
+            return self.bandwidth_hz_arr
+        pos = {int(c): i for i, c in enumerate(self.ids)}
+        return self.bandwidth_hz_arr[[pos[int(i)] for i in ids]]
+
+    def codec_for(self, cid: int):
+        return None
+
+    def total_bandwidth_hz(self) -> float:
+        return float(self.bandwidth_hz_arr.sum())
+
+    def validate(self) -> "FleetDecision":
+        if len(self.ids) and not (self.bandwidth_hz_arr > 0.0).all():
+            bad = int(self.ids[np.argmin(self.bandwidth_hz_arr)])
+            raise ValueError(
+                f"allocation for client {bad} has non-positive bandwidth; "
+                f"exclude the client instead")
+        total = self.total_bandwidth_hz()
+        if total > self.budget_hz * (1.0 + 1e-9):
+            raise ValueError(
+                f"allocated bandwidth {total:.6g} Hz exceeds the round "
+                f"budget {self.budget_hz:.6g} Hz")
+        return self
+
+
+# ---------------------------------------------------------------------------
 # The policy protocol
 # ---------------------------------------------------------------------------
 class AllocationPolicy:
@@ -213,12 +513,39 @@ class AllocationPolicy:
     name = "base"
     needs_summable = False   # True: the policy emits per-client sparsifying
                              # codecs, meaningful only for additive payloads
+    vectorized = False       # True: decide_vectorized is a real fast path
 
     def decide(self, state: RoundState) -> RoundDecision:
         ids, excluded = self.select(state)
         return RoundDecision(allocations=self.allocate(ids, state),
                              excluded=excluded,
                              budget_hz=state.budget_hz).validate()
+
+    def decide_vectorized(self, fstate: FleetRoundState
+                          ) -> Optional[FleetDecision]:
+        """The fleet fast path: the same decision as :meth:`decide` but
+        computed with array ops over a :class:`FleetRoundState` — on the
+        ``"exact"`` backend, bit-identical to the scalar path because
+        both run the shared vectorized cores above.  Returns None when
+        the policy has no vectorized form (``vectorized`` False); the
+        runtime then falls back to the scalar dict path."""
+        if not self.vectorized:
+            return None
+        pick = self._uniform_pick(fstate)
+        n = len(pick)
+        if n == 0:
+            w = d = np.asarray([], dtype=float)
+        else:
+            w, d = self.allocate_vectorized(fstate, pick)
+        return FleetDecision(fstate.ids[pick], w, d, fstate.budget_hz,
+                             positions=pick)
+
+    def allocate_vectorized(self, fstate: FleetRoundState, sel: np.ndarray
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        """-> (widths, deadline grants) over ``fstate`` positions
+        ``sel``.  Default: the uniform split, no deadline."""
+        n = len(sel)
+        return np.full(n, fstate.budget_hz / n), np.full(n, np.inf)
 
     def select(self, state: RoundState) -> tuple[list[int], dict[int, str]]:
         """-> (selected ids, {excluded id: reason})."""
@@ -239,10 +566,18 @@ class AllocationPolicy:
         pick = state.rng.choice(n, size=min(state.k, n), replace=False)
         return [int(state.est.clients[i]) for i in pick]
 
+    @staticmethod
+    def _uniform_pick(fstate: FleetRoundState) -> np.ndarray:
+        """The same uniform draw as :meth:`_uniform_ids` (identical rng
+        call, so the cohorts match bitwise), returned as positions."""
+        n = len(fstate.ids)
+        return fstate.rng.choice(n, size=min(fstate.k, n), replace=False)
+
 
 class UniformPolicy(AllocationPolicy):
     """Uniform cohort, equal bandwidth split — the paper's protocol."""
     name = "uniform"
+    vectorized = True
 
     def select(self, state):
         return self._uniform_ids(state), {}
@@ -365,8 +700,9 @@ class BandwidthOptPolicy(AllocationPolicy):
     seed, the cohort) identical to ``uniform`` — only the per-client
     subchannel widths, and therefore the barrier, change."""
     name = "bandwidth_opt"
+    vectorized = True
 
-    def __init__(self, iters: int = 64):
+    def __init__(self, iters: int = BISECT_ITERS):
         self.iters = int(iters)
 
     def select(self, state):
@@ -383,31 +719,29 @@ class BandwidthOptPolicy(AllocationPolicy):
         sel = np.asarray([pos[i] for i in ids], dtype=int)
         s = np.maximum(state.spectral_eff[sel], 1e-9)   # bits/s/Hz
         tc = np.asarray(state.t_comp_s[sel], dtype=float)
-        bits = bits * state.mult()[sel]   # m slots on one device = m payloads
-        budget = float(state.budget_hz)
-
-        def need(T: float) -> float:
-            gap = T - tc
-            if np.any(gap <= 0.0):
-                return float("inf")
-            return float((bits / (s * gap)).sum())
-
-        lo = float(tc.max())                  # infeasible: zero air time
-        hi = max(2.0 * lo, lo + 1e-6)
-        for _ in range(200):
-            if need(hi) <= budget:
-                break
-            hi *= 2.0
-        for _ in range(self.iters):
-            mid = 0.5 * (lo + hi)
-            if need(mid) <= budget:
-                hi = mid
-            else:
-                lo = mid
-        w = bits / (s * np.maximum(hi - tc, 1e-12))
-        w *= budget / w.sum()                 # hand back the bracket slack
+        w = bandwidth_opt_widths(bits * state.mult()[sel], s, tc,
+                                 state.budget_hz, self.iters)
         return {i: Allocation(bandwidth_hz=float(wk))
                 for i, wk in zip(ids, w)}
+
+    def allocate_vectorized(self, fstate, sel):
+        bits = fstate.up_bits
+        n = len(sel)
+        if bits <= 0.0:
+            w = np.full(n, fstate.budget_hz / n)
+        else:
+            s = np.maximum(fstate.spectral_eff[sel], 1e-9)
+            tc = np.asarray(fstate.t_comp_s[sel], dtype=float)
+            b = bits * fstate.mult()[sel]
+            if fstate.backend == "jit":
+                from repro.edge.fleet import kernel  # late: optional backend
+                w = kernel.bandwidth_opt_widths_jit(b, s, tc,
+                                                    fstate.budget_hz,
+                                                    self.iters)
+            else:
+                w = bandwidth_opt_widths(b, s, tc, fstate.budget_hz,
+                                         self.iters)
+        return w, np.full(n, np.inf)
 
 
 class EnergyOptPolicy(AllocationPolicy):
@@ -442,9 +776,10 @@ class EnergyOptPolicy(AllocationPolicy):
     policy insists on its progress, so the runtime must not cut it
     off."""
     name = "energy_opt"
+    vectorized = True
 
     def __init__(self, deadline_s: float, min_clients: int = 1,
-                 iters: int = 64):
+                 iters: int = BISECT_ITERS):
         self.deadline_s = float(deadline_s)
         self.min_clients = int(min_clients)
         self.iters = int(iters)
@@ -456,23 +791,36 @@ class EnergyOptPolicy(AllocationPolicy):
         sel = np.asarray([pos[int(i)] for i in ids], dtype=int)
         s = np.maximum(state.spectral_eff[sel], 1e-9)
         tc = np.asarray(state.t_comp_s[sel], dtype=float)
-        c = state.up_bits() * state.mult()[sel] / s   # needed W·t_up (Hz·s)
-        gap = self.deadline_s - tc
-        w_min = np.where(gap > 0.0, c / np.maximum(gap, 1e-300), np.inf)
-        w_min = np.where((c <= 0.0) & (gap > 0.0), 0.0, w_min)
+        c, w_min = deadline_min_widths(state.up_bits() * state.mult()[sel],
+                                       s, tc, self.deadline_s)
         return c, tc, w_min
 
     def _feasible(self, w_min, tc, budget):
         """Greedy ascending-W_min packing into the budget (deterministic:
         ties broken by compute time) — the shared feasibility rule select
         and allocate both apply, so they can never disagree."""
-        feas = np.zeros(len(w_min), dtype=bool)
-        used = 0.0
-        for j in np.lexsort((tc, w_min)):
-            if np.isfinite(w_min[j]) and used + w_min[j] <= budget * (1 + 1e-12):
-                feas[j] = True
-                used += w_min[j]
-        return feas
+        return feasible_packing(w_min, tc, budget)
+
+    def _reason(self, w_min_j, tc_j, free, budget):
+        if not np.isfinite(w_min_j):
+            return (f"compute alone takes {tc_j:.3g}s ≥ deadline "
+                    f"{self.deadline_s:g}s — infeasible at any bandwidth")
+        return (f"needs ≥ {w_min_j:.3g} Hz to finish by "
+                f"{self.deadline_s:g}s but only {max(free, 0.0):.3g} Hz "
+                f"of the {budget:.3g} Hz budget remains")
+
+    def _kept_positions(self, w_min, tc, feas, budget):
+        """Positions kept by select: every feasible client plus, in
+        ascending-(W_min, t_comp) order, enough infeasible force-keeps to
+        reach ``min_clients``.  Returns (sorted kept positions, free Hz)."""
+        order = np.lexsort((tc, w_min))
+        kept = feas.copy()
+        short = self.min_clients - int(feas.sum())
+        if short > 0:
+            infeasible = order[~feas[order]]
+            kept[infeasible[:short]] = True
+        free = float(budget) - float(w_min[feas].sum())
+        return np.flatnonzero(kept), free
 
     def select(self, state):
         ids = self._uniform_ids(state)
@@ -481,25 +829,10 @@ class EnergyOptPolicy(AllocationPolicy):
         c, tc, w_min = self._capacity(ids, state)
         budget = float(state.budget_hz)
         feas = self._feasible(w_min, tc, budget)
-        order = np.lexsort((tc, w_min))
-        keep = [j for j in order if feas[j]]
-        forced = [j for j in order if not feas[j]][:max(
-            0, self.min_clients - len(keep))]
-        kept = set(keep) | set(forced)
-        free = budget - float(w_min[feas].sum())
-        excluded = {}
-        for j in range(len(ids)):
-            if j in kept:
-                continue
-            if not np.isfinite(w_min[j]):
-                excluded[int(ids[j])] = (
-                    f"compute alone takes {tc[j]:.3g}s ≥ deadline "
-                    f"{self.deadline_s:g}s — infeasible at any bandwidth")
-            else:
-                excluded[int(ids[j])] = (
-                    f"needs ≥ {w_min[j]:.3g} Hz to finish by "
-                    f"{self.deadline_s:g}s but only {max(free, 0.0):.3g} Hz "
-                    f"of the {budget:.3g} Hz budget remains")
+        kept_pos, free = self._kept_positions(w_min, tc, feas, budget)
+        kept = set(kept_pos.tolist())
+        excluded = {int(ids[j]): self._reason(w_min[j], tc[j], free, budget)
+                    for j in range(len(ids)) if j not in kept}
         return [int(ids[j]) for j in sorted(kept)], excluded
 
     def allocate(self, ids, state):
@@ -517,27 +850,7 @@ class EnergyOptPolicy(AllocationPolicy):
         # combined floors overflow the budget the guarantees are jointly
         # unsatisfiable — everyone shrinks pro rata and the deadline
         # grant below re-derives from the widths actually handed out.
-        w_floor = np.where(feas, w_min, budget / len(ids))
-        total_floor = float(w_floor.sum())
-        if total_floor > budget:
-            w_floor = w_floor * (budget / total_floor)
-        sq = np.sqrt(np.maximum(c, 0.0))
-        if sq.sum() <= 0.0:                    # nothing to upload
-            w = np.maximum(w_floor, budget / len(ids))
-        else:
-            lo, hi = 0.0, budget / sq.sum()
-            for _ in range(self.iters):
-                mid = 0.5 * (lo + hi)
-                if float(np.maximum(w_floor, mid * sq).sum()) <= budget:
-                    lo = mid
-                else:
-                    hi = mid
-            w = np.maximum(w_floor, lo * sq)
-        tot = float(w.sum())
-        if tot <= 0.0:
-            w = np.full(len(ids), budget / len(ids))
-        else:
-            w = w * (budget / tot)             # hand back the bracket slack
+        w = energy_opt_widths(c, w_min, feas, budget, self.iters)
         # grant the deadline iff the width actually handed out still
         # guarantees it (W ≥ W_min) — a force-kept client whose equal
         # share happens to meet the deadline earns the grant, one whose
@@ -548,6 +861,58 @@ class EnergyOptPolicy(AllocationPolicy):
                     bandwidth_hz=float(wk),
                     deadline_s=(self.deadline_s if k else float("inf")))
                 for i, wk, k in zip(ids, w, ok)}
+
+    def _capacity_vec(self, fstate, sel):
+        s = np.maximum(fstate.spectral_eff[sel], 1e-9)
+        tc = np.asarray(fstate.t_comp_s[sel], dtype=float)
+        c, w_min = deadline_min_widths(fstate.up_bits * fstate.mult()[sel],
+                                       s, tc, self.deadline_s)
+        return c, tc, w_min
+
+    def allocate_vectorized(self, fstate, sel):
+        n = len(sel)
+        c, tc, w_min = self._capacity_vec(fstate, sel)
+        budget = float(fstate.budget_hz)
+        feas = self._feasible(w_min, tc, budget)
+        if fstate.backend == "jit":
+            from repro.edge.fleet import kernel  # late: optional backend
+            w = kernel.energy_opt_widths_jit(c, w_min, feas, budget,
+                                             self.iters)
+        else:
+            w = energy_opt_widths(c, w_min, feas, budget, self.iters)
+        ok = w >= w_min * (1.0 - 1e-9)
+        return w, np.where(ok, self.deadline_s, np.inf)
+
+    def decide_vectorized(self, fstate):
+        pick = self._uniform_pick(fstate)
+        if len(pick) == 0:
+            return FleetDecision(np.asarray([], dtype=int),
+                                 np.asarray([], dtype=float),
+                                 np.asarray([], dtype=float),
+                                 fstate.budget_hz,
+                                 positions=np.asarray([], dtype=int))
+        c, tc, w_min = self._capacity_vec(fstate, pick)
+        budget = float(fstate.budget_hz)
+        feas = self._feasible(w_min, tc, budget)
+        kept_pos, free = self._kept_positions(w_min, tc, feas, budget)
+        kept = np.zeros(len(pick), dtype=bool)
+        kept[kept_pos] = True
+        sel = pick[kept_pos]                 # sorted draw positions, as select
+        w, grants = self.allocate_vectorized(fstate, sel)
+        dec = FleetDecision(fstate.ids[sel], w, grants, budget,
+                            positions=sel)
+        excl = ~kept
+        if excl.any():
+            w_min_e, tc_e = w_min[excl], tc[excl]
+            dec.set_excluded(
+                fstate.ids[pick[excl]],
+                # reasons materialize lazily (dec.excluded) — same prose as
+                # the scalar path; both exclusion kinds bucket under
+                # reason_key as "bandwidth_infeasible"
+                reason_fn=lambda j: self._reason(w_min_e[j], tc_e[j],
+                                                 free, budget),
+                bucket="bandwidth_infeasible")
+        return dec
 
 
 class AdaptiveCodecPolicy(AllocationPolicy):

@@ -44,6 +44,26 @@ class ChannelConfig:
     topology: str = "star"           # "star" | "tree"
 
 
+def draw_snr_lin(cfg: ChannelConfig, num_clients: int,
+                 rng: np.random.Generator) -> np.ndarray:
+    """Static per-client mean linear SNR (lognormal shadowing in dB) —
+    the array-state constructor shared by :class:`Channel` and the fleet
+    engine's :class:`~repro.edge.fleet.FleetState` (identical rng call,
+    so both paths draw identical populations from the same seed)."""
+    snr_db = rng.normal(cfg.snr_db_mean, cfg.snr_db_std, num_clients)
+    return 10.0 ** (snr_db / 10.0)
+
+
+def draw_snr_round(cfg: ChannelConfig, snr_lin: np.ndarray,
+                   rng: np.random.Generator) -> np.ndarray:
+    """One round's effective per-client SNR: the static shadowing scaled
+    by an Exp(1) Rayleigh fading power when configured (shared with the
+    fleet engine — one draw per round over the whole population)."""
+    if cfg.fading == "rayleigh":
+        return snr_lin * rng.exponential(1.0, len(snr_lin))
+    return snr_lin
+
+
 class Channel:
     """Per-client link state; rates are re-drawn each round via ``sample``."""
 
@@ -52,18 +72,14 @@ class Channel:
         self.num_clients = num_clients
         self._rng = np.random.default_rng(seed)
         # static per-client mean SNR (shadowing): lognormal in dB
-        snr_db = self._rng.normal(cfg.snr_db_mean, cfg.snr_db_std, num_clients)
-        self._snr_lin = 10.0 ** (snr_db / 10.0)
+        self._snr_lin = draw_snr_lin(cfg, num_clients, self._rng)
         self.rates_bps = self._draw_rates()
 
     def _draw_rates(self) -> np.ndarray:
-        snr = self._snr_lin
-        if self.cfg.fading == "rayleigh":
-            snr = snr * self._rng.exponential(1.0, self.num_clients)
         # this round's effective per-client SNR: set_bandwidth() re-derives
         # rates from it when an AllocationPolicy reapportions the budget
-        self._snr_round = snr
-        return self.cfg.bandwidth_hz * np.log2(1.0 + snr)
+        self._snr_round = draw_snr_round(self.cfg, self._snr_lin, self._rng)
+        return self.cfg.bandwidth_hz * np.log2(1.0 + self._snr_round)
 
     def sample(self) -> np.ndarray:
         """Re-draw fading for a new round; returns uplink rates (bit/s)

@@ -41,6 +41,18 @@ def flops_local_sgd(n_params: int, n_examples: int, epochs: int) -> float:
     return 6.0 * float(n_params) * float(n_examples) * float(max(epochs, 1))
 
 
+def draw_flops_per_s(cfg: DeviceConfig, num_clients: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Per-client effective throughput (lognormal straggler spread) —
+    the array-state constructor shared by :class:`DeviceFleet` and the
+    fleet engine's :class:`~repro.edge.fleet.FleetState` (identical rng
+    call, so both paths draw identical populations from the same seed)."""
+    mu = np.log(cfg.flops_per_s_mean)
+    if cfg.flops_per_s_sigma > 0:
+        return rng.lognormal(mu, cfg.flops_per_s_sigma, num_clients)
+    return np.full(num_clients, cfg.flops_per_s_mean)
+
+
 class DeviceFleet:
     """Per-client compute rates, energy rates, and mutable batteries."""
 
@@ -48,12 +60,7 @@ class DeviceFleet:
         self.cfg = cfg
         self.num_clients = num_clients
         rng = np.random.default_rng(seed)
-        mu = np.log(cfg.flops_per_s_mean)
-        if cfg.flops_per_s_sigma > 0:
-            self.flops_per_s = rng.lognormal(mu, cfg.flops_per_s_sigma,
-                                             num_clients)
-        else:
-            self.flops_per_s = np.full(num_clients, cfg.flops_per_s_mean)
+        self.flops_per_s = draw_flops_per_s(cfg, num_clients, rng)
         self.battery_j = np.full(num_clients, float(cfg.battery_j))
 
     # ------------------------------------------------------------------

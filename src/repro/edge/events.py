@@ -199,7 +199,7 @@ class EventClock:
         its enforced deadline first, so the barrier is
         min(deadline, max_k t_k) — a cut-off straggler never holds the
         round open past its grant."""
-        ts = np.asarray(list(client_times), dtype=np.float64)
+        ts = np.asarray(client_times, dtype=np.float64)
         if ts.size == 0:
             return 0.0
         if cap_s is not None:

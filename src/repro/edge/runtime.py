@@ -27,7 +27,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.edge.allocation import (ClientEstimate, RoundDecision, RoundState,
+from repro.edge.allocation import (ClientEstimate, FleetDecision,
+                                   FleetRoundState, RoundDecision, RoundState,
                                    make_policy)
 from repro.edge.async_agg import AsyncAggregator
 from repro.edge.channel import Channel, ChannelConfig
@@ -75,6 +76,28 @@ class EdgeConfig:
     buffer_size: int = 0                 # async: 0 -> ceil(cohort/2)
     staleness_alpha: float = 0.5         # async: (1+τ)^-alpha discount
     seed: int = 0
+    # fleet fast path (repro.edge.fleet): run the sync hot path as array
+    # ops over the population instead of per-client dicts.  "auto"
+    # engages it when the population reaches fleet_threshold (and the
+    # policy has a vectorized form; sync mode only — the async tail
+    # keeps the EventClock/dict path).  fleet_backend "exact" uses the
+    # shared vectorized-numpy cores (bit-identical to the dict path);
+    # "jit" the x64 lax kernels (equal up to float reassociation).
+    fleet: str = "auto"                  # "auto" | "on" | "off"
+    fleet_threshold: int = 4096          # auto: engage at population >= this
+    fleet_backend: str = "exact"         # "exact" | "jit"
+    # fleet rounds keep tracing O(summary): per-client spans/events are
+    # emitted only while the cohort fits this cap (the chrome exporter's
+    # top_k_clients bounds the file the same way)
+    trace_top_k_clients: int = 64
+
+    def __post_init__(self):
+        if self.fleet not in ("auto", "on", "off"):
+            raise ValueError(f"EdgeConfig.fleet must be 'auto', 'on' or "
+                             f"'off', got {self.fleet!r}")
+        if self.fleet_backend not in ("exact", "jit"):
+            raise ValueError(f"EdgeConfig.fleet_backend must be 'exact' or "
+                             f"'jit', got {self.fleet_backend!r}")
 
 
 class EdgeRuntime:
@@ -133,6 +156,23 @@ class EdgeRuntime:
         # consumes for the in-progress round
         self.verdicts: list[Optional[DeadlineVerdict]] = []
         self._verdict: Optional[DeadlineVerdict] = None
+        self._fleet_round = False   # last commit used the fleet fast path
+                                    # (caps per-client tracing to
+                                    # cfg.trace_top_k_clients)
+
+    # ------------------------------------------------------------------
+    def fleet_active(self) -> bool:
+        """Whether rounds run on the struct-of-arrays fast path: enabled
+        by cfg.fleet ("on", or "auto" once the population reaches
+        fleet_threshold), sync mode only (the async tail keeps the
+        EventClock/dict path), and only for policies with a vectorized
+        form — others silently fall back to the scalar path."""
+        cfg = self.cfg
+        if cfg.mode != "sync" or cfg.fleet == "off":
+            return False
+        if cfg.fleet == "auto" and self.num_clients < cfg.fleet_threshold:
+            return False
+        return bool(getattr(self.policy, "vectorized", False))
 
     # ------------------------------------------------------------------
     def budget_hz(self, k: int) -> float:
@@ -192,6 +232,7 @@ class EdgeRuntime:
         and per-client wire bytes, then judge the realized finishes
         against the granted deadlines (``_enforce``).  ``flops`` aligns
         with ``state.est.clients``."""
+        self._fleet_round = False
         self.decisions.append(decision)
         self.dropped_total += len(decision.excluded)
         rid = len(self.decisions) - 1
@@ -265,6 +306,111 @@ class EdgeRuntime:
         self.verdicts.append(verdict)
         self._verdict = verdict
 
+    def _fleet_state(self, k: int, clients: np.ndarray, wire_fn, fl,
+                     payload_mult=None) -> tuple[FleetRoundState, float]:
+        """The struct-of-arrays twin of :meth:`_round_state`: identical
+        channel writes and float ops, no per-client dicts and no eligible-
+        set estimate (the vectorized policies never consult it)."""
+        budget = self.budget_hz(k)
+        self.channel.set_bandwidth(clients, budget / max(k, 1))
+        agg0, nonagg0 = wire_fn(None)
+        t_comp = fl / np.maximum(self.fleet.flops_per_s[clients], 1.0)
+        fstate = FleetRoundState(
+            k=k, ids=clients, t_comp_s=t_comp,
+            spectral_eff=self.channel.spectral_efficiency(clients),
+            budget_hz=budget, rng=self.rng, up_bits=8.0 * (agg0 + nonagg0),
+            payload_mult=payload_mult, backend=self.cfg.fleet_backend)
+        return fstate, agg0 + nonagg0
+
+    def _decide_fleet(self, k: int, clients: np.ndarray, wire_fn, fl
+                      ) -> tuple[FleetDecision, ClientEstimate]:
+        fstate, tot_bytes = self._fleet_state(k, clients, wire_fn, fl)
+        decision = self.policy.decide_vectorized(fstate)
+        assert decision is not None, \
+            f"policy {self.policy.name!r} advertises vectorized=True but " \
+            f"decide_vectorized returned None"
+        decision.validate()
+        est_sel = self._commit_fleet(decision, fstate, tot_bytes, fl)
+        return decision, est_sel
+
+    def _commit_fleet(self, decision: FleetDecision,
+                      fstate: FleetRoundState, tot_bytes: float,
+                      fl: np.ndarray) -> ClientEstimate:
+        """The fleet twin of :meth:`_apply` + :meth:`_enforce`: identical
+        bookkeeping and float ops (realized estimate at granted widths,
+        deadline verdict), array-shaped.  Tracing is summary-level past
+        ``cfg.trace_top_k_clients`` — counters stay exact, per-client
+        events are skipped — so a traced fleet round stays O(cohort) in
+        metrics and O(top-k) in span volume."""
+        self._fleet_round = True
+        self.decisions.append(decision)
+        self.dropped_total += decision.n_excluded
+        rid = len(self.decisions) - 1
+        if decision.n_excluded:
+            key = f"excluded:{decision.excluded_bucket or 'policy'}"
+            self.drop_reasons[key] = (self.drop_reasons.get(key, 0)
+                                      + decision.n_excluded)
+        tr = self.tracer
+        trace_clients = (tr.enabled and decision.n_selected
+                         <= self.cfg.trace_top_k_clients)
+        if tr.enabled:
+            if decision.n_excluded:
+                tr.metrics.counter("excluded_total").inc(
+                    decision.n_excluded,
+                    reason=decision.excluded_bucket or "policy",
+                    policy=self.policy.name)
+            if trace_clients:
+                for cid, w, d in zip(decision.ids,
+                                     decision.bandwidth_hz_arr,
+                                     decision.deadline_s_arr):
+                    tr.event(obs.ALLOCATE, obs.CAT_CLIENT, self.clock.now,
+                             round_id=rid, client=int(cid),
+                             bandwidth_hz=float(w),
+                             deadline_s=(float(d) if np.isfinite(d)
+                                         else None),
+                             codec=None)
+            elif decision.n_selected:
+                tr.event(obs.ALLOCATE, obs.CAT_ROUND, self.clock.now,
+                         round_id=rid, cohort=decision.n_selected,
+                         total_hz=decision.total_bandwidth_hz(),
+                         min_hz=float(decision.bandwidth_hz_arr.min()),
+                         max_hz=float(decision.bandwidth_hz_arr.max()))
+        if decision.n_selected == 0:
+            self.verdicts.append(None)
+            self._verdict = None
+            return self._empty_est()
+        sel = decision.positions
+        self.channel.set_bandwidth(decision.ids, decision.bandwidth_hz_arr)
+        up = tot_bytes * fstate.mult()[sel]
+        fl_sel = fl[sel]
+        est_sel = self.estimate(decision.ids, up, fl_sel)
+        d_eff = np.minimum(decision.deadline_s_arr,
+                           self.cfg.enforce_deadline_s)
+        if not np.isfinite(d_eff).any():
+            self.verdicts.append(None)
+            self._verdict = None
+            return est_sel
+        t_comp = fl_sel / np.maximum(
+            self.fleet.flops_per_s[decision.ids], 1.0)
+        verdict = enforce_deadlines(
+            decision.ids, est_sel.time_s, t_comp, d_eff,
+            self.cfg.deadline_tolerance_s,
+            tracer=(self.tracer if trace_clients else None),
+            t0=self.clock.now, round_id=rid)
+        decision.set_verdict(verdict)
+        self.deadline_dropped_total += verdict.n_dropped
+        if verdict.n_dropped:
+            self.drop_reasons["deadline_cutoff"] = (
+                self.drop_reasons.get("deadline_cutoff", 0)
+                + verdict.n_dropped)
+            if tr.enabled:
+                tr.metrics.counter("drops_total").inc(
+                    verdict.n_dropped, reason="deadline",
+                    policy=self.policy.name)
+        self.verdicts.append(verdict)
+        self._verdict = verdict
+        return est_sel
+
     def decide(self, k: int, eligible, wire_fn: Callable, flops,
                summable: bool = True, codec=None
                ) -> tuple[list[int], ClientEstimate, RoundDecision]:
@@ -288,6 +434,10 @@ class EdgeRuntime:
             return [], self._empty_est(), decision
         fl = np.broadcast_to(np.asarray(flops, dtype=float), eligible.shape)
         keep = np.isin(eligible, alive)
+        if self.fleet_active():
+            decision, est_sel = self._decide_fleet(k, eligible[keep],
+                                                   wire_fn, fl[keep])
+            return decision.selected, est_sel, decision
         state = self._round_state(k, eligible[keep], wire_fn, fl[keep],
                                   summable, codec)
         decision = self.policy.decide(state)
@@ -320,6 +470,16 @@ class EdgeRuntime:
                                       return_counts=True)
         fl_uniq = np.zeros(len(uniq))
         np.add.at(fl_uniq, inv, fl)
+        if self.fleet_active():
+            fstate, tot_bytes = self._fleet_state(
+                len(clients), uniq, wire_fn, fl_uniq, payload_mult=counts)
+            sel = np.arange(len(uniq))
+            w, d = self.policy.allocate_vectorized(fstate, sel)
+            decision = FleetDecision(uniq, w, d, fstate.budget_hz,
+                                     positions=sel).validate()
+            est_sel = self._commit_fleet(decision, fstate, tot_bytes,
+                                         fl_uniq)
+            return est_sel, decision
         # payload_mult: m slots on one device = m payloads over its single
         # subchannel — the policy sizes allocations against m·bits, and
         # the estimates/clock bill every slot
@@ -447,8 +607,15 @@ class EdgeRuntime:
         for phase, dt in (("downlink", t_down), ("barrier", barrier),
                           ("drain", max(t_round - barrier, 0.0))):
             tr.metrics.counter("phase_s_total").inc(dt, phase=phase)
-        for j, cl in enumerate(c):
-            cl = int(cl)
+        idx = range(len(c))
+        if self._fleet_round and c.size > self.cfg.trace_top_k_clients:
+            # fleet rounds keep span volume O(top-k): only the slowest
+            # (latest-active) clients get per-client tracks — the same
+            # clients export.to_chrome(top_k_clients=...) would keep
+            idx = np.argsort(active, kind="stable")
+            idx = idx[-self.cfg.trace_top_k_clients:]
+        for j in idx:
+            cl = int(c[j])
             comp_end = start + min(float(t_comp[j]), float(active[j]))
             tr.span(obs.COMPUTE, obs.CAT_CLIENT, start, comp_end,
                     round_id=rid, client=cl)
@@ -462,6 +629,13 @@ class EdgeRuntime:
     def _meter_energy(self, c: np.ndarray, spent_j: float) -> None:
         m = self.tracer.metrics
         m.counter("energy_j_total").inc(spent_j)
+        if self._fleet_round and c.size > self.cfg.trace_top_k_clients:
+            # summary-level battery metering at fleet scale: label
+            # cardinality stays O(1) instead of O(population)
+            batt = self.fleet.battery_j[c]
+            m.gauge("battery_j_min").set(float(batt.min()))
+            m.gauge("battery_j_mean").set(float(batt.mean()))
+            return
         for cl in c:
             m.gauge("battery_j").set(float(self.fleet.battery_j[int(cl)]),
                                      client=int(cl))

@@ -24,6 +24,7 @@ import math
 from dataclasses import dataclass
 
 import jax
+import numpy as np
 
 BYTES_F32 = 4
 BYTES_INT8 = 1
@@ -95,17 +96,21 @@ class CommLedger:
         metric bills depth × max.  tree, non-aggregatable: every payload
         reaches the root — the sum again.  With uniform sizes all three
         reduce exactly to :meth:`upload`.  Returns the ``(star, tree)``
-        bytes added."""
-        sizes = [float(b) for b in wire_bytes]
-        k = len(sizes)
+        bytes added.
+
+        ``wire_bytes`` may be a list or an ndarray; both are summed with
+        the same numpy reduction, so the fleet fast path (arrays) and the
+        dict path (lists) bill bitwise-identical totals."""
+        sizes = np.asarray(wire_bytes, dtype=float)
+        k = sizes.size
         if k == 0:
             return 0.0, 0.0
-        d_star = sum(sizes)
+        d_star = float(sizes.sum())
         if aggregatable:
             depth = max(1, math.ceil(math.log2(max(k, 2))))
-            d_tree = depth * max(sizes)
+            d_tree = depth * float(sizes.max())
         else:
-            d_tree = sum(sizes)
+            d_tree = d_star
         self.up_star_bytes += d_star
         self.up_tree_bytes += d_tree
         return d_star, d_tree

@@ -109,6 +109,11 @@ class FederatedRun:
         self._round_verdict = None      # its DeadlineVerdict (None = no
                                         # finite deadline this round)
         self._flops_cache: dict[int, float] = {}
+        # eligible ids + per-client flops are run-constant (the partition
+        # never changes); cached so a fleet-scale round stays O(cohort)
+        # in python instead of O(population) list comprehensions
+        self._eligible: Optional[list[int]] = None
+        self._eligible_flops: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     # convenience views into the strategy (examples/benchmarks poke these)
@@ -148,7 +153,13 @@ class FederatedRun:
 
     def _decision_bytes(self) -> tuple[np.ndarray, np.ndarray]:
         """(total, non-aggregatable) per-client wire bytes aligned with
-        the current decision's selected cohort."""
+        the current decision's selected cohort.  Without per-client
+        codec overrides every client costs the same — one wire_fn call
+        instead of O(cohort)."""
+        if not self._decision.heterogeneous_codecs:
+            n = self._decision.n_selected
+            agg0, nonagg0 = self._wire_fn(None)
+            return np.full(n, agg0 + nonagg0), np.full(n, nonagg0)
         pairs = [self._wire_fn(self._decision.codec_for(i))
                  for i in self._decision.selected]
         agg = np.asarray([p[0] for p in pairs])
@@ -157,14 +168,19 @@ class FederatedRun:
 
     def sample_clients(self) -> list[int]:
         k = max(1, int(self.fcfg.participation * self.fcfg.num_clients))
-        eligible = [i for i in range(self.fcfg.num_clients)
-                    if len(self.partition[i]) > 0]
+        if self._eligible is None:
+            self._eligible = [i for i in range(self.fcfg.num_clients)
+                              if len(self.partition[i]) > 0]
+            self._eligible_flops = np.asarray(
+                [self._plan_flops(i) for i in self._eligible])
+        eligible = self._eligible
         if self.edge is None:
             return list(self.rng.choice(eligible, size=min(k, len(eligible)),
                                         replace=False))
+        flops = self._eligible_flops
         if self.edge.async_agg is not None:  # don't re-pick in-flight clients
             eligible = [i for i in eligible if i not in self.edge.busy]
-        flops = np.asarray([self._plan_flops(i) for i in eligible])
+            flops = np.asarray([self._plan_flops(i) for i in eligible])
         selected, est, decision = self.edge.decide(
             k, eligible, self._wire_fn, flops,
             summable=self.plan.summable, codec=self.codec)
@@ -205,10 +221,19 @@ class FederatedRun:
                   and self._decision.heterogeneous_codecs)
         verdict = self._round_verdict
         frac = {}
+        frac_arr = None
         if verdict is not None and verdict.any_dropped:
             frac = {int(c): float(f)
                     for c, f in zip(verdict.clients, verdict.tx_frac)
                     if f < 1.0}
+            # aligned fast path: on the edge sync path the verdict judges
+            # exactly the selected cohort in order, so tx_frac is already
+            # the per-client byte fraction — no dict lookups per client
+            if np.array_equal(verdict.clients, np.asarray(selected)):
+                frac_arr = verdict.tx_frac
+            else:
+                frac_arr = np.asarray([frac.get(int(i), 1.0)
+                                       for i in selected])
         for ph in self.plan.phases:
             if ph.down_floats:
                 # every selected client received the broadcast, including
@@ -220,14 +245,25 @@ class FederatedRun:
                         phase=ph.name, codec="none")
             if not ph.up_floats:
                 continue
-            if hetero or frac:
+            if hetero:
                 planned = [(self._decision.codec_for(i) or ph.codec)
                            .wire_bytes(ph.up_floats) for i in selected]
                 billed = [w * frac.get(int(i), 1.0)
                           for w, i in zip(planned, selected)]
                 d_star, d_tree = self.ledger.upload_per_client(
                     billed, aggregatable=ph.aggregatable)
-                codec_label = "per_client" if hetero else ph.codec.spec()
+                codec_label = "per_client"
+            elif frac:
+                # uniform codec + deadline drops: bill tx_frac of the
+                # uniform wire size as one array op (same float ops as
+                # the per-client list path — w · frac elementwise, then
+                # upload_per_client's shared numpy reduction)
+                w_uniform = ph.wire_up_bytes()
+                planned = np.full(n_selected, w_uniform)
+                billed = planned * frac_arr
+                d_star, d_tree = self.ledger.upload_per_client(
+                    billed, aggregatable=ph.aggregatable)
+                codec_label = ph.codec.spec()
             else:
                 w_uniform = ph.wire_up_bytes()
                 planned = billed = [w_uniform] * n_selected
@@ -244,7 +280,7 @@ class FederatedRun:
                 for i, p, b in zip(selected, planned, billed):
                     tr.audit.add(rid, int(i), ph.name, p, b)
         n_landed = n_selected - (0 if self._decision is None
-                                 else len(self._decision.dropped))
+                                 else self._decision.n_dropped)
         n_scalars = (self.plan.round_scalars
                      + self.plan.scalars_per_client * n_landed)
         if n_scalars and n_landed:
@@ -296,9 +332,12 @@ class FederatedRun:
         server aggregates the on-time partial cohort with re-normalized
         n_k weights, and the ledger bills only their on-air bytes."""
         selected = self.sample_clients()
-        dropped = ({} if self._decision is None
-                   else self._decision.dropped)
-        landed = [i for i in selected if i not in dropped]
+        n_dropped = (0 if self._decision is None
+                     else self._decision.n_dropped)
+        # survivors preserves selection order on both decision types, so
+        # this equals filtering `selected` by the dropped set
+        landed = (selected if not n_dropped
+                  else self._decision.survivors)
         self._meter_round(selected)
         datas = [self._client_data(i) for i in landed]
         context = self.strategy.round_context(datas, self.rng)
@@ -342,8 +381,8 @@ class FederatedRun:
             weights.append(len(data[0]))
             losses.append(loss)
         info = {"cohort": len(landed)}
-        if dropped:
-            info["dropped"] = len(dropped)
+        if n_dropped:
+            info["dropped"] = n_dropped
         if losses:
             info["loss"] = float(np.mean(losses))
         if self.edge is not None and self.edge.async_agg is not None:

@@ -200,7 +200,7 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
         # weighted_mean re-normalizes over the on-time partial cohort
         # (an all-dropped round applies no server step at all)
         mask = None
-        if decision.dropped:
+        if decision.n_dropped:
             mask = np.asarray([float(int(cc) not in decision.dropped)
                                for cc in cohort], dtype=np.float32)
             weights = jnp.asarray(weights) * mask

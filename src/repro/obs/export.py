@@ -100,17 +100,39 @@ def _tid(client: int) -> int:
     return 0 if client < 0 else int(client) + 1
 
 
-def to_chrome(tracer: Tracer, include_wall: bool = True) -> dict:
+def _top_clients(tracer: Tracer, k: int) -> set:
+    """The ``k`` clients with the latest span end (slowest finish first)
+    on the simulated timeline — the stragglers a fleet-scale trace is
+    usually opened to find."""
+    latest: dict[int, float] = {}
+    for s in tracer.spans:
+        if s.cat == CAT_WALL or s.client < 0:
+            continue
+        latest[s.client] = max(latest.get(s.client, float("-inf")), s.t1)
+    ranked = sorted(latest, key=lambda c: (-latest[c], c))
+    return set(ranked[:max(int(k), 0)])
+
+
+def to_chrome(tracer: Tracer, include_wall: bool = True,
+              top_k_clients: Optional[int] = None) -> dict:
     """The ``traceEvents`` envelope: complete ("X") events for spans,
     instant ("i") events for point events, metadata ("M") rows naming
     the processes and per-client threads.  Simulated seconds map to
-    trace microseconds 1:1 (1 sim second == 1s on the Perfetto ruler)."""
+    trace microseconds 1:1 (1 sim second == 1s on the Perfetto ruler).
+
+    ``top_k_clients`` (None = everyone) bounds the per-client tracks for
+    fleet-scale traces: only the k slowest-finishing clients keep their
+    threads; the round-level track (thread 0) is always complete."""
     ev: list[dict] = []
     ev.append({"name": "process_name", "ph": "M", "pid": _SIM_PID, "tid": 0,
                "args": {"name": "edge-sim"}})
+    keep = (None if top_k_clients is None
+            else _top_clients(tracer, top_k_clients))
     tids = {0}
     for s in tracer.spans:
         if s.cat == CAT_WALL:
+            continue
+        if keep is not None and s.client >= 0 and s.client not in keep:
             continue
         tids.add(_tid(s.client))
         ev.append({"name": s.name, "cat": s.cat, "ph": "X",
@@ -119,6 +141,8 @@ def to_chrome(tracer: Tracer, include_wall: bool = True) -> dict:
                    "args": _clean({"round": s.round_id, **s.args})})
     for e in tracer.events:
         if e.cat == CAT_WALL:
+            continue
+        if keep is not None and e.client >= 0 and e.client not in keep:
             continue
         tids.add(_tid(e.client))
         ev.append({"name": e.name, "cat": e.cat, "ph": "i", "s": "t",
@@ -141,9 +165,11 @@ def to_chrome(tracer: Tracer, include_wall: bool = True) -> dict:
     return {"traceEvents": ev, "displayTimeUnit": "ms"}
 
 
-def write_chrome(tracer: Tracer, path: str, include_wall: bool = True) -> str:
+def write_chrome(tracer: Tracer, path: str, include_wall: bool = True,
+                 top_k_clients: Optional[int] = None) -> str:
     with open(path, "w") as f:
-        json.dump(to_chrome(tracer, include_wall=include_wall), f)
+        json.dump(to_chrome(tracer, include_wall=include_wall,
+                            top_k_clients=top_k_clients), f)
     return path
 
 

@@ -218,24 +218,46 @@ class PlanAudit:
     for deadline-dropped clients (only on-air bytes billed), so
     Σ billed == ``CommLedger.up_star_bytes`` always — the PR-3/4/5
     "ledger ≤ plan, equality iff no drops" contract as one assertable
-    object instead of per-test re-derivations."""
+    object instead of per-test re-derivations.
+
+    ``max_rows`` (None = exhaustive, the default) bounds row retention
+    for fleet-scale runs: once the cap is reached, clean (billed ==
+    planned) rows are counted but not stored (``dropped_rows``), while
+    *shortfall* rows — the interesting ones, billed < planned — are
+    ALWAYS retained.  The running ``planned_total`` / ``billed_total``
+    cover every ``add`` regardless of retention, so :meth:`verify`
+    still checks the full invariant; only :meth:`per_client` is limited
+    to the retained rows."""
 
     enabled = True
 
-    def __init__(self):
+    def __init__(self, max_rows: Optional[int] = None):
         self.rows: list[PlanAuditRow] = []
+        self.max_rows = None if max_rows is None else int(max_rows)
+        self.dropped_rows = 0           # clean rows counted but not stored
+        self._planned_total = 0.0
+        self._billed_total = 0.0
 
     def add(self, round_id: int, client: int, phase: str,
             planned_bytes: float, billed_bytes: float) -> None:
+        planned_bytes = float(planned_bytes)
+        billed_bytes = float(billed_bytes)
+        self._planned_total += planned_bytes
+        self._billed_total += billed_bytes
+        # only CLEAN rows are droppable: a mismatch in either direction
+        # (shortfall, or an over-billing bug verify must see) is retained
+        if (self.max_rows is not None and len(self.rows) >= self.max_rows
+                and billed_bytes == planned_bytes):
+            self.dropped_rows += 1
+            return
         self.rows.append(PlanAuditRow(int(round_id), int(client), str(phase),
-                                      float(planned_bytes),
-                                      float(billed_bytes)))
+                                      planned_bytes, billed_bytes))
 
     def planned_total(self) -> float:
-        return float(sum(r.planned_bytes for r in self.rows))
+        return self._planned_total
 
     def billed_total(self) -> float:
-        return float(sum(r.billed_bytes for r in self.rows))
+        return self._billed_total
 
     def shortfall_rows(self) -> list[PlanAuditRow]:
         """Rows billed under plan — exactly the deadline-dropped uploads."""

@@ -128,13 +128,16 @@ class Tracer(NullTracer):
     capture them.  ``wall=True`` additionally records ``wall_span``
     context blocks on the host wall-clock timeline (category
     ``CAT_WALL`` — excluded from determinism comparisons by
-    construction, since sim and wall categories never mix)."""
+    construction, since sim and wall categories never mix).
+    ``audit_max_rows`` caps :class:`~repro.obs.metrics.PlanAudit` row
+    retention for fleet-scale runs (None = exhaustive; totals stay
+    exact and shortfall rows are always kept either way)."""
 
     enabled = True
 
-    def __init__(self, wall: bool = False, sink=None):
+    def __init__(self, wall: bool = False, sink=None, audit_max_rows=None):
         self.metrics = _metrics.MetricsRegistry()
-        self.audit = _metrics.PlanAudit()
+        self.audit = _metrics.PlanAudit(max_rows=audit_max_rows)
         self.spans: list[Span] = []
         self.events: list[TraceEvent] = []
         self.records: list[dict] = []   # per-round edge runtime records

@@ -80,6 +80,18 @@ def test_same_seed_bit_identical(alg, policy):
     assert a == b, (alg, policy)
 
 
+@pytest.mark.parametrize("alg,policy", MATRIX)
+def test_fleet_fast_path_bit_identical(alg, policy):
+    """The struct-of-arrays fleet fast path (``EdgeConfig.fleet="on"``)
+    must be a pure optimization: at small n it produces bit-identical
+    ledgers, drop/exclusion sets, cohorts, bandwidths, and clocks vs the
+    per-client dict path — the correctness contract that lets the
+    10⁵–10⁶-client engine inherit this whole suite."""
+    a = _fingerprint(_run(alg, policy, fleet="off"))
+    b = _fingerprint(_run(alg, policy, fleet="on"))
+    assert a == b, (alg, policy)
+
+
 def test_same_seed_bit_identical_async_expiry_path():
     """The buffered-async dispatch with enforced deadlines: expiry
     events, spectrum holds, and staleness buffers must all replay
