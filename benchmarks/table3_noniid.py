@@ -15,12 +15,12 @@ def run(quick: bool = True):
         mcfg, n_train=1500 if quick else 4000, n_test=400, seed=0, noise=1.4)
     rows = []
     rounds = 8 if quick else 40
-    for l in (2, 3, 5):
+    for ell in (2, 3, 5):
         for alg in ("fedavg_sgd", "fedova"):
             fcfg = FedConfig(num_clients=20 if quick else 100,
                              participation=0.25 if quick else 0.2,
                              local_epochs=2 if quick else 5,
-                             batch_size=16, rounds=rounds, noniid_l=l,
+                             batch_size=16, rounds=rounds, noniid_l=ell,
                              learning_rate=0.05, seed=0)
             runner = FederatedRun(mcfg, fcfg, train, test, alg)
             hist = runner.run(rounds=rounds, eval_every=rounds // 2)

@@ -1,0 +1,13 @@
+"""The built-in rule set.  Importing this package registers every rule
+(mirroring how importing ``repro.fed.strategies`` registers the
+built-in strategies); third-party rules register the same way::
+
+    from repro.analysis import Rule, register
+
+    @register
+    class MyRule(Rule):
+        id = "XYZ001"
+        ...
+"""
+from repro.analysis.rules import (determinism, jit_purity, ledger,  # noqa: F401
+                                  registry_contract, tracer_noop, x64)

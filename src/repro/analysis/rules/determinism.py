@@ -1,0 +1,83 @@
+"""RPL001 — sim-determinism: no wall clocks or global RNG in sim paths.
+
+The determinism suite (tests/test_determinism.py) proves same-seed
+replays are bit-identical, but only on the paths it exercises.  This
+rule makes the contract structural: inside ``src/repro/{edge,fed,obs}``
+every random draw must come from an explicitly seeded generator
+(``np.random.default_rng(seed)``, ``jax.random.PRNGKey``) and every
+timestamp from the simulated ``EventClock`` — never from the host.
+
+Opt-in wall-clock measurement (the tracer's ``CAT_WALL`` timeline, the
+``BENCH_*.json`` timestamp) marks itself with ``# repro: allow[RPL001]``
+so the exception is visible at the call site.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import ModuleSource, Rule, register
+
+SIM_PATHS = ("repro/edge/", "repro/fed/", "repro/obs/")
+
+WALL_CLOCKS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+}
+DATETIME_NOW = {
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "date.today", "datetime.date.today",
+}
+# random.Random(seed) is an explicitly seeded generator object — allowed
+RANDOM_ALLOWED = {"Random"}
+# the seeded Generator construction surface of numpy.random — allowed
+NP_RANDOM_ALLOWED = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                     "PCG64DXSM", "Philox", "MT19937", "SFC64",
+                     "BitGenerator"}
+
+
+@register
+class SimDeterminismRule(Rule):
+    id = "RPL001"
+    title = "sim-determinism"
+    description = ("no wall clocks (time.time/datetime.now) or global RNG "
+                   "(random.*, np.random.<fn>) in src/repro/{edge,fed,obs} "
+                   "— sim paths must replay bit-identically")
+
+    def applies_to(self, path: str) -> bool:
+        return any(seg in path for seg in SIM_PATHS)
+
+    def check(self, mod: ModuleSource) -> list:
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = mod.resolve(node.func)
+            if d is None:
+                continue
+            msg = self._classify(d)
+            if msg is not None:
+                out.append(self.finding(mod, node, msg))
+        return out
+
+    def _classify(self, d: str):
+        if d in WALL_CLOCKS:
+            return (f"wall-clock call {d}() in a sim path — simulated time "
+                    "comes from EventClock; opt-in CAT_WALL measurement "
+                    "sites take `# repro: allow[RPL001]`")
+        if d in DATETIME_NOW:
+            return (f"{d}() reads the host clock in a sim path — replays "
+                    "must be bit-identical")
+        head, _, fn = d.partition(".")
+        if head == "random" and fn and "." not in fn \
+                and fn not in RANDOM_ALLOWED:
+            return (f"global random.{fn}() draws from the process-wide RNG "
+                    "— use a seeded np.random.default_rng / "
+                    "jax.random.PRNGKey stream")
+        if d.startswith(("np.random.", "numpy.random.")):
+            fn = d.split(".")[-1]
+            if fn not in NP_RANDOM_ALLOWED:
+                return (f"np.random.{fn}() uses the legacy global numpy "
+                        "RNG — draw from a seeded Generator instead")
+        return None

@@ -1,0 +1,105 @@
+"""RPL003 — jit-purity: no host syncs or Python branching on tracers
+inside jit-decorated kernels.
+
+Scope: ``edge/fleet/kernel.py`` and ``src/repro/kernels/`` — the files
+whose jitted functions are the repo's hot compute path.  Inside a
+function decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)``:
+
+  * ``.item()`` anywhere is a device->host sync that breaks tracing;
+  * ``float()`` / ``bool()`` / ``int()`` / ``np.*`` applied to a traced
+    value concretizes a tracer (TracerConversionError at best, a silent
+    recompile-per-value at worst);
+  * Python ``if`` / ``while`` / ``assert`` / ternary tests on a traced
+    value branch at trace time — use ``lax.cond`` / ``lax.select`` /
+    ``jnp.where``.
+
+"Traced" is approximated lexically: the function's parameters minus the
+decorator's ``static_argnames``, plus the parameters of functions
+nested inside (loop bodies, ``lax`` callees).  Values derived through
+assignments are not chased — shape-derived Python ints (``B, D =
+x.shape``) stay legal, as they are at trace time.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import ModuleSource, Rule, contains_name, register
+from repro.analysis.rules.x64 import jit_static_argnames
+
+HOST_CASTS = {"float", "bool", "int", "complex"}
+
+
+def _param_names(fn) -> list:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+@register
+class JitPurityRule(Rule):
+    id = "RPL003"
+    title = "jit-purity"
+    description = ("no .item()/float()/bool() host syncs or Python "
+                   "branching on traced values inside jax.jit functions "
+                   "(fleet kernel + repro.kernels)")
+
+    def applies_to(self, path: str) -> bool:
+        return "edge/fleet/kernel" in path or "repro/kernels/" in path
+
+    def check(self, mod: ModuleSource) -> list:
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            statics = jit_static_argnames(mod, node)
+            if statics is None:
+                continue
+            traced = {p for p in _param_names(node) if p not in statics}
+            # params of nested defs/lambdas are traced when their caller
+            # hands them traced values (lax callees, BlockSpec lambdas)
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+                    traced.update(p for p in _param_names(sub)
+                                  if p not in statics)
+            out.extend(self._check_jit_body(mod, node, traced))
+        return out
+
+    def _check_jit_body(self, mod: ModuleSource, fn, traced: set) -> list:
+        out = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                test = node.test
+                if contains_name(test, traced):
+                    kind = {ast.If: "if", ast.While: "while",
+                            ast.IfExp: "ternary", ast.Assert: "assert"}[
+                                type(node)]
+                    out.append(self.finding(
+                        mod, node,
+                        f"Python {kind} on a traced value inside "
+                        f"jax.jit function {fn.name}() branches at trace "
+                        "time — use lax.cond/lax.select/jnp.where"))
+            elif isinstance(node, ast.Call):
+                out.extend(self._check_call(mod, fn, node, traced))
+        return out
+
+    def _check_call(self, mod: ModuleSource, fn, node: ast.Call,
+                    traced: set) -> list:
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args and not node.keywords:
+            return [self.finding(
+                mod, node,
+                f".item() inside jax.jit function {fn.name}() is a "
+                "device->host sync — return the array and read it "
+                "outside the jit boundary")]
+        d = mod.resolve(node.func)
+        if d is None:
+            return []
+        hit = (d in HOST_CASTS
+               or d.startswith(("np.", "numpy.")))
+        if hit and any(contains_name(a, traced) for a in node.args):
+            return [self.finding(
+                mod, node,
+                f"{d}() on a traced value inside jax.jit function "
+                f"{fn.name}() concretizes the tracer — keep it a jnp "
+                "array (cast with .astype / jnp.asarray)")]
+        return []

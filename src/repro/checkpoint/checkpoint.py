@@ -50,7 +50,7 @@ def restore(path: str, template):
         raise KeyError(f"checkpoint {path} missing keys: {sorted(missing)[:5]}...")
     tmpl_leaves = jax.tree_util.tree_leaves(template)
     restored = []
-    for k, t in zip(flat, tmpl_leaves):
+    for k, t in zip(flat, tmpl_leaves, strict=True):
         v = data[k]
         meta = "__viewdtype__/" + k
         if meta in data.files:

@@ -51,7 +51,8 @@ class AdamState(NamedTuple):
 
 
 def adam_init(params) -> AdamState:
-    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    def z():
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
     return AdamState(mu=z(), nu=z(), step=jnp.zeros((), jnp.int32))
 
 

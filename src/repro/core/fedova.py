@@ -78,14 +78,14 @@ def aggregate(model: OvaModel, client_components, client_masks) -> OvaModel:
     client_components: pytree with leaves (K, n_classes, ...);
     client_masks: (K, n_classes) — which components each client trained."""
     def per_class(cls_params_prev, cls_idx):
-        stacked = jax.tree.map(lambda l: l[:, cls_idx], client_components)
+        stacked = jax.tree.map(lambda leaf: leaf[:, cls_idx], client_components)
         return aggregation.grouped_mean(
             cls_params_prev, stacked, client_masks[:, cls_idx]
         )
 
     n = model.n_classes
     new = [
-        per_class(jax.tree.map(lambda l: l[i], model.components), i)
+        per_class(jax.tree.map(lambda leaf: leaf[i], model.components), i)
         for i in range(n)
     ]
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new)

@@ -176,8 +176,10 @@ def reference_two_loop(s_list, y_list, g):
 
     q = np.asarray(g, dtype=np.float64).copy()
     alphas = []
-    rhos = [1.0 / float(np.dot(y, s)) for s, y in zip(s_list, y_list)]
-    for s, y, rho in zip(reversed(s_list), reversed(y_list), reversed(rhos)):
+    rhos = [1.0 / float(np.dot(y, s))
+            for s, y in zip(s_list, y_list, strict=True)]
+    for s, y, rho in zip(reversed(s_list), reversed(y_list), reversed(rhos),
+                         strict=True):
         a = rho * float(np.dot(s, q))
         q -= a * np.asarray(y, np.float64)
         alphas.append(a)
@@ -186,7 +188,8 @@ def reference_two_loop(s_list, y_list, g):
     else:
         gamma = 1.0
     r = gamma * q
-    for (s, y, rho), a in zip(zip(s_list, y_list, rhos), reversed(alphas)):
+    for (s, y, rho), a in zip(zip(s_list, y_list, rhos, strict=True),
+                              reversed(alphas), strict=True):
         b = rho * float(np.dot(y, r))
         r += (a - b) * np.asarray(s, np.float64)
     return -r

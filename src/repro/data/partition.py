@@ -10,16 +10,16 @@ from __future__ import annotations
 import numpy as np
 
 
-def noniid_partition(labels: np.ndarray, num_clients: int, l: int, n_classes: int,
+def noniid_partition(labels: np.ndarray, num_clients: int, ell: int, n_classes: int,
                      seed: int = 0) -> list[np.ndarray]:
     """Returns a list of index arrays, one per client."""
     rng = np.random.default_rng(seed)
-    if l <= 0 or l >= n_classes:
+    if ell <= 0 or ell >= n_classes:
         idx = rng.permutation(len(labels))
         return [np.sort(part) for part in np.array_split(idx, num_clients)]
 
     # partitions per label group: (l*K)/n
-    per_label = max(1, (l * num_clients) // n_classes)
+    per_label = max(1, (ell * num_clients) // n_classes)
     shards: list[tuple[int, np.ndarray]] = []
     for c in range(n_classes):
         idx_c = np.where(labels == c)[0]
@@ -28,7 +28,7 @@ def noniid_partition(labels: np.ndarray, num_clients: int, l: int, n_classes: in
             if len(part):
                 shards.append((c, part))
 
-    # deal shards so every client receives l shards with distinct labels
+    # deal shards so every client receives ell shards with distinct labels
     rng.shuffle(shards)
     clients: list[list[np.ndarray]] = [[] for _ in range(num_clients)]
     client_labels: list[set] = [set() for _ in range(num_clients)]
@@ -37,7 +37,7 @@ def noniid_partition(labels: np.ndarray, num_clients: int, l: int, n_classes: in
         rng.shuffle(order)
         placed = False
         for k in order:  # prefer clients lacking this label and under quota
-            if len(clients[k]) < l and c not in client_labels[k]:
+            if len(clients[k]) < ell and c not in client_labels[k]:
                 clients[k].append(part)
                 client_labels[k].add(c)
                 placed = True

@@ -54,11 +54,16 @@ def _upsample(small: np.ndarray, h: int, w: int) -> np.ndarray:
     sh, sw, c = small.shape
     yi = np.linspace(0, sh - 1, h)
     xi = np.linspace(0, sw - 1, w)
-    y0 = np.floor(yi).astype(int); y1 = np.minimum(y0 + 1, sh - 1)
-    x0 = np.floor(xi).astype(int); x1 = np.minimum(x0 + 1, sw - 1)
-    wy = (yi - y0)[:, None, None]; wx = (xi - x0)[None, :, None]
-    a = small[y0][:, x0]; b = small[y0][:, x1]
-    cgrid = small[y1][:, x0]; d = small[y1][:, x1]
+    y0 = np.floor(yi).astype(int)
+    y1 = np.minimum(y0 + 1, sh - 1)
+    x0 = np.floor(xi).astype(int)
+    x1 = np.minimum(x0 + 1, sw - 1)
+    wy = (yi - y0)[:, None, None]
+    wx = (xi - x0)[None, :, None]
+    a = small[y0][:, x0]
+    b = small[y0][:, x1]
+    cgrid = small[y1][:, x0]
+    d = small[y1][:, x1]
     return (a * (1 - wy) * (1 - wx) + b * (1 - wy) * wx
             + cgrid * wy * (1 - wx) + d * wy * wx)
 

@@ -53,7 +53,7 @@ from __future__ import annotations
 import inspect
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
@@ -454,7 +454,7 @@ class FleetDecision:
             self._allocations = {
                 int(i): Allocation(bandwidth_hz=float(w), deadline_s=float(d))
                 for i, w, d in zip(self.ids, self.bandwidth_hz_arr,
-                                   self.deadline_s_arr)}
+                                   self.deadline_s_arr, strict=True)}
         return self._allocations
 
     @property
@@ -551,7 +551,8 @@ class AllocationPolicy:
         """-> (selected ids, {excluded id: reason})."""
         raise NotImplementedError
 
-    def allocate(self, ids, state: RoundState) -> dict[int, Allocation]:
+    def allocate(self, ids: Sequence[int],
+                 state: RoundState) -> dict[int, Allocation]:
         """Split the round budget over the selected ids (default: equal)."""
         ids = [int(i) for i in ids]
         if not ids:
@@ -614,7 +615,8 @@ class DeadlinePolicy(AllocationPolicy):
         selected = [int(c) for c in sub.clients[keep]]
         excluded = {int(c): f"predicted finish {t:.3g}s > deadline "
                             f"{self.deadline_s:g}s"
-                    for c, t in zip(sub.clients[~keep], sub.time_s[~keep])}
+                    for c, t in zip(sub.clients[~keep], sub.time_s[~keep],
+                                strict=True)}
         return selected, excluded
 
     def allocate(self, ids, state):
@@ -626,7 +628,7 @@ class DeadlinePolicy(AllocationPolicy):
                     bandwidth_hz=a.bandwidth_hz,
                     deadline_s=(self.deadline_s if t <= self.deadline_s
                                 else float("inf")))
-                for (i, a), t in zip(base.items(), pred)}
+                for (i, a), t in zip(base.items(), pred, strict=True)}
 
 
 class EnergyThresholdPolicy(AllocationPolicy):
@@ -637,7 +639,7 @@ class EnergyThresholdPolicy(AllocationPolicy):
     name = "energy_threshold"
 
     def __init__(self, battery_floor_j: float = 0.0,
-                 round_budget_j: float = float("inf")):
+                 round_budget_j: float = math.inf):
         self.battery_floor_j = float(battery_floor_j)
         self.round_budget_j = float(round_budget_j)
 
@@ -648,7 +650,7 @@ class EnergyThresholdPolicy(AllocationPolicy):
               & (est.energy_j <= est.battery_j))
         excluded = {}
         for c, e, b in zip(est.clients[~ok], est.energy_j[~ok],
-                           est.battery_j[~ok]):
+                           est.battery_j[~ok], strict=True):
             excluded[int(c)] = (
                 f"battery {b:.3g}J under floor {self.battery_floor_j:g}J"
                 if b <= self.battery_floor_j else
@@ -722,7 +724,7 @@ class BandwidthOptPolicy(AllocationPolicy):
         w = bandwidth_opt_widths(bits * state.mult()[sel], s, tc,
                                  state.budget_hz, self.iters)
         return {i: Allocation(bandwidth_hz=float(wk))
-                for i, wk in zip(ids, w)}
+                for i, wk in zip(ids, w, strict=True)}
 
     def allocate_vectorized(self, fstate, sel):
         bits = fstate.up_bits
@@ -860,7 +862,7 @@ class EnergyOptPolicy(AllocationPolicy):
         return {i: Allocation(
                     bandwidth_hz=float(wk),
                     deadline_s=(self.deadline_s if k else float("inf")))
-                for i, wk, k in zip(ids, w, ok)}
+                for i, wk, k in zip(ids, w, ok, strict=True)}
 
     def _capacity_vec(self, fstate, sel):
         s = np.maximum(fstate.spectral_eff[sel], 1e-9)
@@ -960,7 +962,7 @@ class AdaptiveCodecPolicy(AllocationPolicy):
                          self.ratio_floor, 1.0)
         base_bytes = sum(state.wire_bytes(None))
         out = {}
-        for i, r in zip(ids, ratios):
+        for i, r in zip(ids, ratios, strict=True):
             codec = TopKCodec(float(r))
             if sum(state.wire_bytes(codec)) >= base_bytes:
                 codec = None    # dominated format: keep the base codec

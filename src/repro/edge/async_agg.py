@@ -109,7 +109,7 @@ class AsyncAggregator:
         self.version += 1
         if self.tracer.enabled:
             from repro.obs import trace as _t
-            for e, tau in zip(entries, stale):
+            for e, tau in zip(entries, stale, strict=True):
                 self.tracer.event(_t.LAND, _t.CAT_ASYNC, e.finish_time,
                                   client=e.client, staleness=int(tau),
                                   version=self.version)

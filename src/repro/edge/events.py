@@ -79,7 +79,7 @@ class DeadlineVerdict:
         for c, f, d, fr in zip(self.clients[self.dropped],
                                self.finish_s[self.dropped],
                                self.deadline_s[self.dropped],
-                               self.tx_frac[self.dropped]):
+                               self.tx_frac[self.dropped], strict=True):
             out[int(c)] = (f"realized finish {f:.3g}s > deadline {d:g}s "
                            f"({100.0 * fr:.0f}% of the upload transmitted "
                            "before cutoff, payload discarded)")

@@ -241,7 +241,7 @@ class EdgeRuntime:
             self.drop_reasons[key] = self.drop_reasons.get(key, 0) + 1
         tr = self.tracer
         if tr.enabled:
-            for cid, reason in decision.excluded.items():
+            for _cid, reason in decision.excluded.items():
                 tr.metrics.counter("excluded_total").inc(
                     1, reason=reason_key(reason), policy=self.policy.name)
             for cid, a in decision.allocations.items():
@@ -362,7 +362,8 @@ class EdgeRuntime:
             if trace_clients:
                 for cid, w, d in zip(decision.ids,
                                      decision.bandwidth_hz_arr,
-                                     decision.deadline_s_arr):
+                                     decision.deadline_s_arr,
+                                     strict=True):
                     tr.event(obs.ALLOCATE, obs.CAT_CLIENT, self.clock.now,
                              round_id=rid, client=int(cid),
                              bandwidth_hz=float(w),

@@ -116,7 +116,7 @@ def quantize_tree(tree, key):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     q_leaves, scales = [], []
-    for leaf, k in zip(leaves, keys):
+    for leaf, k in zip(leaves, keys, strict=True):
         a = leaf.astype(jnp.float32)
         scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-12) / 127.0
         x = a / scale
@@ -250,7 +250,7 @@ def names() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def make(spec) -> PayloadCodec:
+def make(spec: str | PayloadCodec) -> PayloadCodec:
     """Build a codec from a ``FedConfig.compress`` spec: a PayloadCodec
     instance (returned as-is) or a ``"name"`` / ``"name:param"`` string,
     e.g. ``"int8"``, ``"topk:0.05"``."""

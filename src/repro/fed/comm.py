@@ -31,7 +31,7 @@ BYTES_INT8 = 1
 
 
 def tree_n_floats(tree) -> int:
-    return sum(int(l.size) for l in jax.tree.leaves(tree))
+    return sum(int(leaf.size) for leaf in jax.tree.leaves(tree))
 
 
 @dataclass

@@ -224,7 +224,8 @@ class FederatedRun:
         frac_arr = None
         if verdict is not None and verdict.any_dropped:
             frac = {int(c): float(f)
-                    for c, f in zip(verdict.clients, verdict.tx_frac)
+                    for c, f in zip(verdict.clients, verdict.tx_frac,
+                                    strict=True)
                     if f < 1.0}
             # aligned fast path: on the edge sync path the verdict judges
             # exactly the selected cohort in order, so tx_frac is already
@@ -249,7 +250,7 @@ class FederatedRun:
                 planned = [(self._decision.codec_for(i) or ph.codec)
                            .wire_bytes(ph.up_floats) for i in selected]
                 billed = [w * frac.get(int(i), 1.0)
-                          for w, i in zip(planned, selected)]
+                          for w, i in zip(planned, selected, strict=True)]
                 d_star, d_tree = self.ledger.upload_per_client(
                     billed, aggregatable=ph.aggregatable)
                 codec_label = "per_client"
@@ -277,7 +278,7 @@ class FederatedRun:
                       phase=ph.name, codec=codec_label)
                 c.inc(d_tree, direction="up", topology="tree",
                       phase=ph.name, codec=codec_label)
-                for i, p, b in zip(selected, planned, billed):
+                for i, p, b in zip(selected, planned, billed, strict=True):
                     tr.audit.add(rid, int(i), ph.name, p, b)
         n_landed = n_selected - (0 if self._decision is None
                                  else self._decision.n_dropped)
@@ -342,7 +343,7 @@ class FederatedRun:
         datas = [self._client_data(i) for i in landed]
         context = self.strategy.round_context(datas, self.rng)
         payloads, weights, losses = [], [], []
-        for j, (cid, data) in enumerate(zip(landed, datas)):
+        for j, (cid, data) in enumerate(zip(landed, datas, strict=True)):
             payload, loss = self.strategy.client_step(
                 data, self.rng, None if context is None else context[j])
             # the allocation policy may hand this client its own wire
@@ -356,14 +357,15 @@ class FederatedRun:
                     # wall-clock encode cost + achieved ratio live in the
                     # metrics registry only — never on the sim timeline,
                     # so traced replays stay deterministic
-                    t0 = time.perf_counter()
+                    t0 = time.perf_counter()  # repro: allow[RPL001]
                     payload, res = self.strategy.compress_payload(
                         payload, sub, self._ef_residual.get(cid),
                         codec=codec)
                     payload = jax.block_until_ready(payload)
                     m = self.tracer.metrics
                     m.histogram("codec_encode_s").observe(
-                        time.perf_counter() - t0, codec=codec.spec())
+                        time.perf_counter() - t0,  # repro: allow[RPL001]
+                        codec=codec.spec())
                     n_up = sum(ph.up_floats for ph in self.plan.phases)
                     m.gauge("codec_ratio").set(
                         codecs.achieved_ratio(codec, n_up),

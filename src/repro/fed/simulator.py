@@ -216,7 +216,7 @@ def with_edge(round_step: Callable, edge: EdgeRuntime, n_params: int,
         # duplicate cohort slots (mod fallback) share one subchannel but
         # carry one payload each — bill every slot
         uniq, counts = np.unique(cohort, return_counts=True)
-        mult = {int(u): int(c) for u, c in zip(uniq, counts)}
+        mult = {int(u): int(c) for u, c in zip(uniq, counts, strict=True)}
         up_arr = np.asarray([mult[int(i)] * wire_fn()[0]
                              for i in decision.selected])
         rec = edge.finish_round_sync(est, up_arr, down_bytes)

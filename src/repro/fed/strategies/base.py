@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -119,7 +119,7 @@ class FedStrategy(abc.ABC):
 
     name: str = ""  # filled in by ``register``
 
-    def __init__(self, model_cfg, fed_cfg, n_classes: int):
+    def __init__(self, model_cfg: Any, fed_cfg: Any, n_classes: int):
         self.mcfg = model_cfg
         self.fcfg = fed_cfg
         self.n_classes = n_classes
@@ -132,7 +132,7 @@ class FedStrategy(abc.ABC):
 
     # -- construction ----------------------------------------------------
     @abc.abstractmethod
-    def _build(self, key) -> None:
+    def _build(self, key: jax.Array) -> None:
         """Initialize model params, optimizer state, and jitted fns."""
 
     # -- declaration -----------------------------------------------------
@@ -162,7 +162,8 @@ class FedStrategy(abc.ABC):
         return self._n_params_cache
 
     # -- one round -------------------------------------------------------
-    def round_context(self, datas, rng):
+    def round_context(self, datas: Sequence[tuple], rng: Any
+                      ) -> Optional[Sequence[Any]]:
         """Optional cohort-wide pre-phase (FedDANE's gradient round).
 
         datas: list of (xs, ys) for the selected cohort.  Returns a
@@ -171,14 +172,16 @@ class FedStrategy(abc.ABC):
         return None
 
     @abc.abstractmethod
-    def client_step(self, data, rng, context=None):
+    def client_step(self, data: tuple, rng: Any,
+                    context: Any = None) -> tuple[Any, float]:
         """One client's local update on data=(xs, ys).
 
         Returns (payload, loss).  The payload is whatever
         ``aggregate`` consumes — for summable plans it must be a pytree
         that remains meaningful under weighted summation."""
 
-    def aggregate(self, payloads, weights):
+    def aggregate(self, payloads: Sequence[Any],
+                  weights: Sequence[float]) -> Any:
         """Combine client payloads under (n_k- or staleness-) weights.
         Default: weighted mean over the stacked payload pytrees — right
         for any single-pytree payload (deltas, models, gradients);
@@ -189,10 +192,12 @@ class FedStrategy(abc.ABC):
             jnp.asarray(weights, jnp.float32))
 
     @abc.abstractmethod
-    def server_step(self, aggregate) -> None:
+    def server_step(self, aggregate: Any) -> None:
         """Apply an aggregate to the server model/optimizer state."""
 
-    def compress_payload(self, payload, key, residual=None, codec=None):
+    def compress_payload(self, payload: Any, key: Any, residual: Any = None,
+                         codec: Optional[codecs.PayloadCodec] = None
+                         ) -> tuple[Any, Any]:
         """Round-trip the payload through ``codec`` (default: the run's
         codec; an allocation policy may hand a client its own wire
         format, e.g. adaptive_codec's channel-scheduled top-k ratios).
@@ -204,7 +209,7 @@ class FedStrategy(abc.ABC):
         return (codec or self.codec).roundtrip(payload, key, residual)
 
     # -- evaluation ------------------------------------------------------
-    def evaluate(self, x, y) -> float:
+    def evaluate(self, x: Any, y: Any) -> float:
         """Test accuracy of the current server model.  Default: the
         jitted ``self._eval`` over ``self.params`` (built in ``_build``);
         strategies with other model state override."""

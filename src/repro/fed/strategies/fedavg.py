@@ -26,7 +26,9 @@ class LocalSolveStrategy(FedStrategy):
 
     def _build(self, key) -> None:
         self.params, _ = cnn.init(self.mcfg, key)
-        self._loss = lambda p, b: cnn.softmax_loss(p, self.mcfg, b)
+        def _loss(p, b):
+            return cnn.softmax_loss(p, self.mcfg, b)
+        self._loss = _loss
         self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, self.mcfg, x, y))
         self._build_solver()
 

@@ -24,7 +24,9 @@ from repro.models import cnn
 class FedDaneStrategy(FedStrategy):
     def _build(self, key) -> None:
         self.params, _ = cnn.init(self.mcfg, key)
-        self._loss = lambda p, b: cnn.softmax_loss(p, self.mcfg, b)
+        def _loss(p, b):
+            return cnn.softmax_loss(p, self.mcfg, b)
+        self._loss = _loss
         self._grad_fim = fed_client.make_grad_fim_fn(
             self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode)
         self._dane = fed_client.make_feddane_fn(self._loss)
@@ -66,7 +68,7 @@ class FedDaneStrategy(FedStrategy):
         w = jnp.asarray(weights, jnp.float32)
         global_grad = aggregation.weighted_mean(
             jax.tree.map(lambda *t: jnp.stack(t), *sent_grads), w)
-        return list(zip([global_grad] * len(datas), local_grads))
+        return list(zip([global_grad] * len(datas), local_grads, strict=True))
 
     def client_step(self, data, rng, context=None):
         xs, ys = data

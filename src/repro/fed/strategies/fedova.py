@@ -34,7 +34,9 @@ class FedOvaStrategy(FedStrategy):
                 jax.random.split(key, self.n_classes)),
             n_classes=self.n_classes,
         )
-        self._binary_loss = lambda p, b: cnn.binary_loss(p, bcfg, b)
+        def _binary_loss(p, b):
+            return cnn.binary_loss(p, bcfg, b)
+        self._binary_loss = _binary_loss
         self._local_sgd = fed_client.make_local_sgd_fn(self._binary_loss)
         self._apply = jax.jit(lambda p, x: cnn.apply(p, bcfg, x))
         if self.server_opt == "fim_lbfgs":
@@ -42,7 +44,7 @@ class FedOvaStrategy(FedStrategy):
                 learning_rate=self.fcfg.second_order_lr, m=self.fcfg.lbfgs_m,
                 damping=self.fcfg.fim_damping, fim_ema=self.fcfg.fim_ema,
                 max_step_norm=self.fcfg.max_step_norm)
-            one = jax.tree.map(lambda l: l[0], self.model.components)
+            one = jax.tree.map(lambda leaf: leaf[0], self.model.components)
             self.opt_state = jax.vmap(
                 lambda _: fim_lbfgs.init(one, self.ocfg))(
                     jnp.arange(self.n_classes))
@@ -53,7 +55,7 @@ class FedOvaStrategy(FedStrategy):
     def n_params(self) -> int:
         """One binary component (the broadcast/upload unit)."""
         if self._n_params_cache is None:
-            one = jax.tree.map(lambda l: l[0], self.model.components)
+            one = jax.tree.map(lambda leaf: leaf[0], self.model.components)
             self._n_params_cache = comm.tree_n_floats(one)
         return self._n_params_cache
 
@@ -95,7 +97,8 @@ class FedOvaStrategy(FedStrategy):
             yb = (ys == c).astype(np.int64)
             batches = fed_client.stack_batches(
                 xs, yb, self.fcfg.batch_size, self.fcfg.local_epochs, rng)
-            comp_c = jax.tree.map(lambda l: l[c], self.model.components)
+            comp_c = jax.tree.map(lambda leaf, cc=c: leaf[cc],
+                                  self.model.components)
             comp_new, loss = self._train_component(c, comp_c, batches)
             client_comp = jax.tree.map(
                 lambda full, new, cc=c: full.at[cc].set(new),

@@ -21,7 +21,9 @@ from repro.models import cnn
 class FimLbfgsStrategy(FedStrategy):
     def _build(self, key) -> None:
         self.params, _ = cnn.init(self.mcfg, key)
-        self._loss = lambda p, b: cnn.softmax_loss(p, self.mcfg, b)
+        def _loss(p, b):
+            return cnn.softmax_loss(p, self.mcfg, b)
+        self._loss = _loss
         self._grad_fim = fed_client.make_grad_fim_fn(
             self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode)
         self.ocfg = fim_lbfgs.FimLbfgsConfig(

@@ -78,8 +78,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
 
 
 @functools.partial(

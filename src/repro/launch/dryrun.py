@@ -122,7 +122,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     # arg 0 = params (TP sharding); arg 1 (train) = optimizer state, which
     # additionally ZeRO-shards over the data axes (see utils/sharding.py).
     in_shardings = []
-    for i, (s, a) in enumerate(zip(arg_shapes, arg_axes)):
+    for i, (s, a) in enumerate(zip(arg_shapes, arg_axes, strict=True)):
         rules = None
         if shape.kind == "train" and i == 1:
             rules = shd.OPT_RULES

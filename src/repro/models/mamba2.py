@@ -139,7 +139,8 @@ def mamba_apply(p, cfg, x):
         return state, (y_inter + y_intra)
 
     state0 = jnp.zeros((B, nh, hd, N), jnp.float32)
-    swap = lambda t: jnp.swapaxes(t, 0, 1)  # scan over chunks
+    def swap(t):  # scan over chunks
+        return jnp.swapaxes(t, 0, 1)
     _, ys = jax.lax.scan(chunk_step, state0,
                          (swap(xs_c), swap(B_c), swap(C_c), swap(dt_c), swap(dA_c)))
     y = jnp.swapaxes(ys, 0, 1).reshape(B, S, nh, hd)

@@ -180,7 +180,8 @@ class DecodeCache(NamedTuple):
 def init_cache(cfg, batch: int, context: int):
     window = min(cfg.window, context) if cfg.attn_variant == "sliding_window" else context
     L = cfg.num_layers
-    prefix = lambda a: ("layers," + a) if a else "layers"
+    def prefix(a):
+        return ("layers," + a) if a else "layers"
     if cfg.family == "ssm":
         st = mamba2.state_init(cfg, batch)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), st)

@@ -221,12 +221,16 @@ def _finite_tree(o):
 
 
 def git_rev(root: str = ".") -> str:
+    # without this guard, `git rev-parse` walks up from ``root`` and can
+    # report an enclosing checkout's rev for an exported/tarball tree
+    if not os.path.exists(os.path.join(root, ".git")):  # a worktree's .git is a file
+        return "unknown"
     try:
         return subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"], cwd=root,
             capture_output=True, text=True, timeout=10,
         ).stdout.strip() or "unknown"
-    except OSError:
+    except (OSError, subprocess.SubprocessError):
         return "unknown"
 
 

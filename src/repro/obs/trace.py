@@ -144,7 +144,9 @@ class Tracer(NullTracer):
         self.logs: list[dict] = []      # per-round driver log records
         self.wall = bool(wall)
         self._sink = print if sink is None else sink
-        self._wall_epoch = time.perf_counter()
+        # CAT_WALL epoch: wall measurement is the opt-in exception to
+        # the sim-determinism contract
+        self._wall_epoch = time.perf_counter()  # repro: allow[RPL001]
 
     # -- recording -------------------------------------------------------
     def span(self, name: str, cat: str, t0: float, t1: float,
@@ -169,12 +171,12 @@ class Tracer(NullTracer):
     @contextmanager
     def wall_span(self, name: str, round_id: int = -1, client: int = -1,
                   **args):
-        t0 = time.perf_counter() - self._wall_epoch
+        t0 = time.perf_counter() - self._wall_epoch  # repro: allow[RPL001]
         try:
             yield
         finally:
             if self.wall:
-                t1 = time.perf_counter() - self._wall_epoch
+                t1 = time.perf_counter() - self._wall_epoch  # repro: allow[RPL001]
                 self.span(name, CAT_WALL, t0, t1, round_id=round_id,
                           client=client, **args)
 

@@ -98,7 +98,7 @@ def spec_for(
     if len(names) != len(shape):
         raise ValueError(f"axes {names} do not match shape {shape}")
     spec, used = [], set()
-    for dim, name in zip(shape, names):
+    for dim, name in zip(shape, names, strict=True):
         mesh_axes = rules.get(name)
         if isinstance(mesh_axes, str):
             mesh_axes = (mesh_axes,)

@@ -243,7 +243,8 @@ def test_allocate_for_prices_duplicate_cohort_slots():
 
     chan = ChannelConfig(bandwidth_hz=2e5, fading="none", snr_db_std=0.0)
     flat = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=0.0)
-    wire = (lambda c: (1e5, 0.0))
+    def wire(c):
+        return (1e5, 0.0)
 
     def alloc(cohort):
         rt = EdgeRuntime(EdgeConfig(channel=chan, device=flat,
@@ -281,7 +282,8 @@ def test_async_runtime_through_allocate_for_does_not_starve():
 
     rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
                                 mode="async", buffer_size=2), 8)
-    wire = (lambda c: (1e5, 0.0))
+    def wire(c):
+        return (1e5, 0.0)
     _, dec1 = rt.allocate_for(np.arange(4), wire, 1e9)
     _, dec2 = rt.allocate_for(np.arange(4), wire, 1e9)  # used to raise
     assert dec2.budget_hz == pytest.approx(dec1.budget_hz)

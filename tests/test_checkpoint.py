@@ -17,7 +17,7 @@ def test_roundtrip(tmp_path):
     checkpoint.save(path, tree)
     template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
     out = checkpoint.restore(path, template)
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out), strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
         assert a.dtype == b.dtype

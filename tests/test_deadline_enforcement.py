@@ -71,10 +71,10 @@ def _expected_uplink(run):
     client, per phase, under its own codec, scaled by the fraction of
     the upload on the air before its cutoff."""
     star = 0.0
-    for dec, ver in zip(run.edge.decisions, run.edge.verdicts):
+    for dec, ver in zip(run.edge.decisions, run.edge.verdicts, strict=True):
         frac = ({} if ver is None else
                 {int(c): float(f)
-                 for c, f in zip(ver.clients, ver.tx_frac)})
+                 for c, f in zip(ver.clients, ver.tx_frac, strict=True)})
         for ph in run.plan.phases:
             if not ph.up_floats:
                 continue
@@ -95,7 +95,7 @@ def test_enforcement_invariants_random_fleets(seed, d_idx):
     deadline = DEADLINES[d_idx]
     run, hist = _run("uniform", seed=seed, enforce_deadline_s=deadline)
     n_drops = 0
-    for dec, ver in zip(run.edge.decisions, run.edge.verdicts):
+    for dec, ver in zip(run.edge.decisions, run.edge.verdicts, strict=True):
         n_drops += len(dec.dropped)
         for cid, why in dec.dropped.items():                       # (a)
             assert why and isinstance(why, str), (seed, deadline, cid)
@@ -103,7 +103,7 @@ def test_enforcement_invariants_random_fleets(seed, d_idx):
         if ver is not None:
             # a drop bills strictly less than the plan; a survivor bills
             # exactly the plan (tx_frac is the billing authority)
-            for c, f, dr in zip(ver.clients, ver.tx_frac, ver.dropped):
+            for c, f, dr in zip(ver.clients, ver.tx_frac, ver.dropped, strict=True):
                 assert (f < 1.0) == bool(dr), (seed, deadline, int(c))
     plan_bytes = sum(
         ph.wire_up_bytes() for ph in run.plan.phases if ph.up_floats) * sum(
@@ -144,7 +144,8 @@ def test_energy_opt_budget_and_deadline_feasibility(seed, d_idx, n):
     rt = EdgeRuntime(EdgeConfig(channel=UPLINK, device=HETERO,
                                 scheduler="energy_opt", deadline_s=deadline,
                                 min_clients=1, seed=seed), n, seed=seed)
-    wire = (lambda c: (1.2e5, 0.0))
+    def wire(c):
+        return (1.2e5, 0.0)
     selected, est, dec = rt.decide(n, np.arange(n), wire, 1e9)
     assert dec.total_bandwidth_hz() <= dec.budget_hz * (1 + 1e-9)
     assert all(a.bandwidth_hz > 0 for a in dec.allocations.values())
@@ -158,7 +159,7 @@ def test_energy_opt_budget_and_deadline_feasibility(seed, d_idx, n):
             assert est.time_s[i] <= grant + 1e-6, (seed, deadline, int(cid))
     # a granted (finite-deadline) client is never dropped at the barrier
     if ver is not None:
-        for c, dr in zip(ver.clients, ver.dropped):
+        for c, dr in zip(ver.clients, ver.dropped, strict=True):
             assert not (dr and math.isfinite(
                 dec.allocations[int(c)].deadline_s)), (seed, deadline, int(c))
 
@@ -296,7 +297,7 @@ def test_enforced_drop_keeps_plan_ledger_for_landed_clients():
     total_drops = sum(len(d.dropped) for d in run.edge.decisions)
     assert total_drops > 0, "scenario must actually drop stragglers"
     for dec in run.edge.decisions:
-        for cid, why in dec.dropped.items():
+        for _cid, why in dec.dropped.items():
             assert why
     assert run.ledger.up_star_bytes == pytest.approx(_expected_uplink(run))
     # and per landed client the bill is exactly the plan's wire bytes
@@ -351,7 +352,7 @@ def test_async_expiry_releases_spectrum_and_busy():
     # every hold belongs to a client that is either still uploading or
     # waiting out its expiry — never both released and held
     assert set(run.edge._held_hz) <= (run.edge.busy | set(run.edge._expiry))
-    for cl, t in run.edge._expiry.items():
+    for _cl, t in run.edge._expiry.items():
         assert t > run.edge.clock.now  # pending expiries are in the future
     # conservation: every dispatched client either landed in a buffer,
     # is still in flight, or was dropped at its deadline — drops never
@@ -409,5 +410,5 @@ def test_with_edge_masks_dropped_slots():
         same = jax.tree.map(lambda a, b: bool(np.array_equal(a, b)),
                             new_params, s.params)
         assert all(jax.tree.leaves(same))
-    for cid, why in dec.dropped.items():
+    for _cid, why in dec.dropped.items():
         assert why

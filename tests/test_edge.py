@@ -446,7 +446,7 @@ def test_empty_cohort_round_is_recorded_cleanly():
     info = run.round()  # one more: the server model must not move
     assert info["cohort"] == 0
     for a, b in zip(jax.tree.leaves(before),
-                    jax.tree.leaves(run.strategy.params)):
+                    jax.tree.leaves(run.strategy.params), strict=True):
         np.testing.assert_array_equal(a, np.asarray(b))
     # and the edge clock agrees with the ledger: no broadcast happened
     assert run.edge.summary()["wall_clock_s"] == 0.0
@@ -483,7 +483,7 @@ def test_simulator_with_edge_wrapper():
     step = make_round_step(lambda p, b: cnn.softmax_loss(p, mcfg, b),
                            cnn.per_example_loss_fn(mcfg), ocfg)
     edge = EdgeRuntime(EdgeConfig(channel=SLOW_UPLINK, device=HETERO), 8)
-    n_params = sum(int(l.size) for l in jax.tree.leaves(params))
+    n_params = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
     estep = with_edge(step, edge, n_params)
     train, _ = make_classification(mcfg, n_train=256, n_test=64, seed=0)
     rng = np.random.default_rng(0)

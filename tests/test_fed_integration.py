@@ -89,7 +89,8 @@ def test_simulator_round_step_improves_loss():
     from repro.models import cnn
 
     params, _ = cnn.init(MCFG, jax.random.PRNGKey(0))
-    loss_fn = lambda p, b: cnn.softmax_loss(p, MCFG, b)
+    def loss_fn(p, b):
+        return cnn.softmax_loss(p, MCFG, b)
     ocfg = fim_lbfgs.FimLbfgsConfig(learning_rate=1.0, m=5, damping=1e-2,
                                     max_step_norm=1.0)
     step = make_round_step(loss_fn, cnn.per_example_loss_fn(MCFG), ocfg)

@@ -65,7 +65,9 @@ def test_third_party_strategy_drops_in():
     class SignSgdStrategy(FedStrategy):
         def _build(self, key):
             self.params, _ = cnn.init(self.mcfg, key)
-            self._loss = lambda p, b: cnn.softmax_loss(p, self.mcfg, b)
+            def _loss(p, b):
+                return cnn.softmax_loss(p, self.mcfg, b)
+            self._loss = _loss
             self._grad = fed_client.make_grad_fim_fn(
                 self._loss, None, "microbatch")
             self._eval = jax.jit(
@@ -124,7 +126,7 @@ def _expected_ledger(plan, k, rounds):
     scalars = (plan.round_scalars + plan.scalars_per_client * k) * comm.BYTES_F32
     return {f: v * rounds for f, v in zip(
         ("down_bytes", "up_star_bytes", "up_tree_bytes", "scalar_bytes"),
-        (down, up_star, up_tree, scalars))}
+        (down, up_star, up_tree, scalars), strict=True)}
 
 
 @pytest.mark.parametrize("alg", ALL_ALGS)

@@ -10,7 +10,8 @@ def _quadratic(rng, d):
     A = rng.normal(size=(d, d))
     Q = jnp.asarray(A @ A.T / d + 0.5 * np.eye(d))
     b = jnp.asarray(rng.normal(size=d))
-    loss = lambda p: 0.5 * p["w"] @ Q @ p["w"] - b @ p["w"]
+    def loss(p):
+        return 0.5 * p["w"] @ Q @ p["w"] - b @ p["w"]
     wstar = jnp.linalg.solve(Q, b)
     return loss, Q, float(loss({"w": wstar}))
 

@@ -19,7 +19,8 @@ def _push_pairs(params, m, pairs):
 
 
 def _flat(tree):
-    return np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(tree)])
+    return np.concatenate(
+        [np.asarray(leaf).ravel() for leaf in jax.tree.leaves(tree)])
 
 
 def _random_pd_pairs(rng, shapes, n):
@@ -97,5 +98,5 @@ def test_gram_matrix_symmetry_and_blocks():
     np.testing.assert_allclose(M, M.T, rtol=1e-5, atol=1e-6)
     # diag of the s-block equals ||s_i||^2 for the slot each pair landed in
     for slot in range(4):
-        s_i = _flat(jax.tree.map(lambda b: b[slot], h.s))
+        s_i = _flat(jax.tree.map(lambda b, s=slot: b[s], h.s))
         np.testing.assert_allclose(M[slot, slot], s_i @ s_i, rtol=1e-5)

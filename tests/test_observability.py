@@ -130,7 +130,7 @@ def test_energy_and_round_metrics_match_history(sync_run):
         assert abs(tracer.metrics.get("phase_s_total").value(phase=phase)
                    - secs) < 1e-9
     # per-round records match history one-to-one
-    for rid, (rec, h) in enumerate(zip(tracer.records, hist)):
+    for rid, (rec, h) in enumerate(zip(tracer.records, hist, strict=True)):
         assert rec["round_id"] == rid
         assert rec["cohort"] == h["cohort"]
         assert rec["clock_s"] == h["clock_s"]
@@ -344,6 +344,17 @@ def test_bench_json_schema(tmp_path):
     assert doc["meta"] == {"quick": True}
     assert isinstance(doc["git_rev"], str) and doc["git_rev"]
     assert "T" in doc["timestamp"]
+    # tmp_path is no checkout: the rev degrades to "unknown" instead of
+    # silently reporting an enclosing repository's HEAD
+    assert doc["git_rev"] == "unknown"
+
+
+def test_git_rev_degrades_outside_a_checkout(tmp_path):
+    from repro.obs.export import git_rev
+    assert git_rev(str(tmp_path)) == "unknown"
+    # a .git dir alone (not a valid repo) must not raise either
+    (tmp_path / ".git").mkdir()
+    assert git_rev(str(tmp_path)) == "unknown"
 
 
 # ---------------------------------------------------------------------------

@@ -15,11 +15,11 @@ from repro.data.partition import labels_per_client, noniid_partition
     st.integers(1, 5),      # l
     st.integers(0, 10_000), # seed
 )
-def test_partition_is_exact_cover(n_classes, num_clients, l, seed):
+def test_partition_is_exact_cover(n_classes, num_clients, ell, seed):
     rng = np.random.default_rng(seed)
     n = n_classes * 40
     labels = rng.integers(0, n_classes, size=n)
-    parts = noniid_partition(labels, num_clients, min(l, n_classes), n_classes, seed)
+    parts = noniid_partition(labels, num_clients, min(ell, n_classes), n_classes, seed)
     allidx = np.concatenate([p for p in parts if len(p)]) if parts else np.array([])
     # every sample assigned exactly once
     assert len(allidx) == n
@@ -28,17 +28,17 @@ def test_partition_is_exact_cover(n_classes, num_clients, l, seed):
 
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 4), st.integers(0, 10_000))
-def test_label_diversity_bounded_by_l(l, seed):
+def test_label_diversity_bounded_by_l(ell, seed):
     n_classes, num_clients = 10, 20
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, n_classes, size=2000)
-    parts = noniid_partition(labels, num_clients, l, n_classes, seed)
+    parts = noniid_partition(labels, num_clients, ell, n_classes, seed)
     per_client = labels_per_client(labels, parts)
     # the vast majority of clients hold exactly l labels; the dealing
     # fallback may slightly exceed for a few stragglers
     counts = [len(s) for s in per_client if s]
-    assert np.median(counts) <= l
-    assert max(counts) <= l + 2
+    assert np.median(counts) <= ell
+    assert max(counts) <= ell + 2
 
 
 def test_iid_mode_splits_evenly():
