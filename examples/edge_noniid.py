@@ -105,6 +105,14 @@ def demo_cases(mcfg, train, test, rounds):
                          EdgeConfig(channel=star, device=FLEET,
                                     scheduler="uniform",
                                     enforce_deadline_s=8.0)),
+        "churn": case("fedavg_sgd",
+                      EdgeConfig(channel=star, device=FLEET,
+                                 scheduler="deadline", deadline_s=6.0,
+                                 min_clients=3,
+                                 scenario=("diurnal:period=8,amp=0.4,"
+                                           "base=0.7,unit=round|"
+                                           "snr_burst:prob=0.3,scale=0.1"),
+                                 reallocate=True)),
     }
 
 
@@ -127,6 +135,10 @@ BLURBS = {
     "enforced": ("fedavg_sgd, star, uniform + ENFORCED runtime deadline "
                  "(stragglers cut off at the barrier: partial uploads "
                  "billed, payloads discarded, on-time cohort aggregated)"),
+    "churn": ("fedavg_sgd, star, diurnal churn + SNR bursts "
+              "(repro.edge.scenario) under the deadline policy, with "
+              "mid-round re-allocation: a cut straggler's spectrum "
+              "re-lands on the survivors still on the air"),
 }
 
 

@@ -1,1 +1,2 @@
 from repro.checkpoint.checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.run_state import load_run, save_run  # noqa: F401

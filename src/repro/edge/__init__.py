@@ -32,7 +32,12 @@ under the existing federated loop, converting the byte counts the
                     ``FederatedRun`` and the vmapped simulator cohort path;
   * fleet/        — struct-of-arrays mega-scale engine: the same sync
                     round as fused array ops (vectorized policies + a
-                    jitted kernel), 10⁵–10⁶-client populations.
+                    jitted kernel), 10⁵–10⁶-client populations;
+  * scenario/     — availability churn + fault injection (the fourth
+                    registry subsystem): seeded diurnal/markov/trace
+                    availability processes, blackout/SNR-burst/
+                    straggler/battery-gate/data-exclusion injectors, and
+                    the spec-string grammar behind EdgeConfig.scenario.
 
 Bandwidth allocation never changes WHAT is transmitted (the ledger is
 ground truth); per-client codecs change bytes only through their
@@ -51,8 +56,11 @@ from repro.edge.async_agg import AsyncAggregator, staleness_weights
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet, flops_grad_fim, flops_local_sgd
 from repro.edge.events import (DeadlineVerdict, Event, EventClock,
-                               enforce_deadlines)
+                               enforce_deadlines, reallocated_finish)
 from repro.edge.runtime import EdgeConfig, EdgeRuntime
+from repro.edge.scenario import (RoundEffects, Scenario, fault_names,
+                                 make_scenario, process_names,
+                                 register_fault, register_process)
 from repro.edge.scheduler import (CapacityProportionalScheduler,
                                   DeadlineScheduler, EnergyThresholdScheduler,
                                   UniformScheduler, make_scheduler)
@@ -67,7 +75,10 @@ __all__ = [
     "Channel", "ChannelConfig",
     "DeviceConfig", "DeviceFleet", "flops_grad_fim", "flops_local_sgd",
     "DeadlineVerdict", "Event", "EventClock", "enforce_deadlines",
+    "reallocated_finish",
     "EdgeConfig", "EdgeRuntime",
+    "RoundEffects", "Scenario", "make_scenario", "register_process",
+    "register_fault", "process_names", "fault_names",
     "FleetEngine", "FleetState", "FleetRoundState", "FleetDecision",
     "ClientEstimate",
     # legacy aliases (see edge/scheduler.py)

@@ -562,9 +562,16 @@ class AllocationPolicy:
 
     # shared proposal: sample k uniformly (the paper's protocol)
     @staticmethod
-    def _uniform_ids(state: RoundState) -> list[int]:
+    def _uniform_positions(state: RoundState) -> np.ndarray:
+        """The uniform draw as positions into the eligible arrays (the
+        same rng call as :meth:`_uniform_pick`, so the dict and fleet
+        cohorts match bitwise)."""
         n = len(state.est.clients)
-        pick = state.rng.choice(n, size=min(state.k, n), replace=False)
+        return state.rng.choice(n, size=min(state.k, n), replace=False)
+
+    @staticmethod
+    def _uniform_ids(state: RoundState) -> list[int]:
+        pick = AllocationPolicy._uniform_positions(state)
         return [int(state.est.clients[i]) for i in pick]
 
     @staticmethod
@@ -598,25 +605,75 @@ class DeadlinePolicy(AllocationPolicy):
     channel noise it is never dropped at the barrier.  A client kept
     only by the ``min_clients`` floor (predicted past the deadline) is
     granted *no* deadline (inf): the policy insists on its progress, so
-    the runtime must not cut it off."""
+    the runtime must not cut it off.
+
+    Both the scalar dict path and ``decide_vectorized`` run the same
+    shared cores (:func:`deadline_min_widths` for the per-client
+    admission floor, :func:`feasible_packing` as the budget-feasibility
+    authority), so the fleet fast path is bit-identical to the dict path
+    by construction rather than by parallel reimplementation."""
     name = "deadline"
+    vectorized = True
 
     def __init__(self, deadline_s: float, min_clients: int = 1):
         self.deadline_s = float(deadline_s)
         self.min_clients = int(min_clients)
 
+    # --- the shared admission core (both paths, bitwise) ---------------
+    def _admit(self, t_nom: np.ndarray, bits: np.ndarray, s: np.ndarray,
+               tc: np.ndarray, budget: float, k: int
+               ) -> tuple[np.ndarray, np.ndarray, float]:
+        """-> (admitted mask, W_min, W_nom).  Admission is in *time*
+        space — a client is admitted iff its predicted nominal finish
+        ``t_nom`` (``est.time_s``: equal split, this round's draw) meets
+        the deadline — AND its narrowest deadline-meeting subchannel
+        (``deadline_min_widths``) greedily packs into the budget
+        (``feasible_packing``; for the equal split Σ W_min over admitted
+        clients <= k·W_nom <= budget, so the packing rule only bites at
+        float borderline — it is kept as the shared feasibility
+        authority so admission can never outgrow the budget)."""
+        w_nom = budget / max(k, 1)
+        _c, w_min = deadline_min_widths(bits, s, tc, self.deadline_s)
+        return ((t_nom <= self.deadline_s)
+                & feasible_packing(w_min, tc, budget)), w_min, w_nom
+
+    def _keep(self, admit: np.ndarray, t_nom: np.ndarray) -> np.ndarray:
+        """Admission plus the ``min_clients`` floor: when too few admit,
+        force-keep the predicted-fastest ``min_clients`` instead."""
+        if int(admit.sum()) >= self.min_clients:
+            return admit
+        order = np.argsort(t_nom)
+        keep = np.zeros(len(admit), dtype=bool)
+        keep[order[:self.min_clients]] = True
+        return keep
+
+    def _reason(self, t_nom: float) -> str:
+        if t_nom <= self.deadline_s:   # packed out at float borderline
+            return ("meets the deadline but the admitted floors fill "
+                    "the budget")
+        return (f"predicted finish {t_nom:.3g}s > deadline "
+                f"{self.deadline_s:g}s")
+
+    def _grants(self, t_nom: np.ndarray) -> np.ndarray:
+        """Deadline grants over the selected set: clients predicted to
+        meet ``deadline_s`` are held to it, floor force-keeps (predicted
+        past it) are granted none (inf)."""
+        return np.where(t_nom <= self.deadline_s, self.deadline_s, np.inf)
+
+    # --- scalar dict path ----------------------------------------------
     def select(self, state):
-        sub = state.est.for_ids(self._uniform_ids(state))
-        keep = sub.time_s <= self.deadline_s
-        if keep.sum() < self.min_clients:
-            order = np.argsort(sub.time_s)
-            keep = np.zeros(len(sub.clients), dtype=bool)
-            keep[order[:self.min_clients]] = True
-        selected = [int(c) for c in sub.clients[keep]]
-        excluded = {int(c): f"predicted finish {t:.3g}s > deadline "
-                            f"{self.deadline_s:g}s"
-                    for c, t in zip(sub.clients[~keep], sub.time_s[~keep],
-                                strict=True)}
+        pick = self._uniform_positions(state)
+        clients = state.est.clients[pick]
+        t_nom = state.est.time_s[pick]
+        bits = state.up_bits() * state.mult()[pick]
+        admit, _w_min, _w_nom = self._admit(
+            t_nom, bits, state.spectral_eff[pick], state.t_comp_s[pick],
+            float(state.budget_hz), state.k)
+        keep = self._keep(admit, t_nom)
+        selected = [int(c) for c in clients[keep]]
+        excluded = {int(c): self._reason(float(t))
+                    for c, t in zip(clients[~keep], t_nom[~keep],
+                                    strict=True)}
         return selected, excluded
 
     def allocate(self, ids, state):
@@ -624,11 +681,53 @@ class DeadlinePolicy(AllocationPolicy):
         if not base:
             return base
         pred = state.est.for_ids(list(base)).time_s
-        return {i: Allocation(
-                    bandwidth_hz=a.bandwidth_hz,
-                    deadline_s=(self.deadline_s if t <= self.deadline_s
-                                else float("inf")))
-                for (i, a), t in zip(base.items(), pred, strict=True)}
+        grants = self._grants(pred)
+        return {i: Allocation(bandwidth_hz=a.bandwidth_hz,
+                              deadline_s=float(d))
+                for (i, a), d in zip(base.items(), grants, strict=True)}
+
+    # --- fleet fast path -----------------------------------------------
+    def _t_nom(self, fstate, idx) -> np.ndarray:
+        """The scalar path's ``est.time_s`` op-for-op
+        (``Channel.set_bandwidth`` then ``uplink_time_s`` at the nominal
+        equal split), so admission, the floor ordering, grants, and the
+        exclusion prose match the dict path bitwise."""
+        bits = fstate.up_bits * fstate.mult()[idx]
+        w_nom = float(fstate.budget_hz) / max(fstate.k, 1)
+        return (fstate.t_comp_s[idx]
+                + bits / np.maximum(w_nom * fstate.spectral_eff[idx], 1e-6))
+
+    def allocate_vectorized(self, fstate, sel):
+        n = len(sel)
+        budget = float(fstate.budget_hz)
+        return (np.full(n, budget / max(n, 1)),
+                self._grants(self._t_nom(fstate, sel)))
+
+    def decide_vectorized(self, fstate):
+        pick = self._uniform_pick(fstate)
+        budget = float(fstate.budget_hz)
+        if len(pick) == 0:
+            e = np.asarray([], dtype=float)
+            return FleetDecision(fstate.ids[pick], e, e.copy(), budget,
+                                 positions=pick)
+        bits = fstate.up_bits * fstate.mult()[pick]
+        s = fstate.spectral_eff[pick]
+        tc = fstate.t_comp_s[pick]
+        t_nom = self._t_nom(fstate, pick)
+        admit, _w_min, _w_nom = self._admit(t_nom, bits, s, tc, budget,
+                                            fstate.k)
+        keep = self._keep(admit, t_nom)
+        sel = pick[keep]
+        w, grants = self.allocate_vectorized(fstate, sel)
+        dec = FleetDecision(fstate.ids[sel], w, grants, budget,
+                            positions=sel)
+        if bool((~keep).any()):
+            t_e = t_nom[~keep]
+            dec.set_excluded(
+                fstate.ids[pick[~keep]],
+                reason_fn=lambda j: self._reason(float(t_e[j])),
+                bucket="deadline")
+        return dec
 
 
 class EnergyThresholdPolicy(AllocationPolicy):

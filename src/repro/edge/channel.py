@@ -87,6 +87,16 @@ class Channel:
         self.rates_bps = self._draw_rates()
         return self.rates_bps
 
+    def scale_snr(self, factor) -> None:
+        """Scale this round's effective linear SNR in place (scenario
+        SNR-degradation faults, applied *after* allocation so the grant
+        was provisioned against the clean draw); re-derives the nominal
+        rates — callers re-apply :meth:`set_bandwidth` for granted
+        widths.  The next ``sample()`` resets the draw."""
+        self._snr_round = self._snr_round * np.asarray(factor, dtype=float)
+        self.rates_bps = self.cfg.bandwidth_hz * np.log2(
+            1.0 + self._snr_round)
+
     # ------------------------------------------------------------------
     def spectral_efficiency(self, clients) -> np.ndarray:
         """Per-client bits/s/Hz under this round's fading draw,

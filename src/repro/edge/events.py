@@ -135,6 +135,63 @@ def enforce_deadlines(clients, finish_s, t_comp_s, deadline_s,
     return verdict
 
 
+def reallocated_finish(finish_s, t_comp_s, deadline_s, widths_hz,
+                       dropped) -> np.ndarray:
+    """Mid-round re-allocation: survivors' finishes after dropped
+    clients' spectrum is re-offered (``EdgeConfig.reallocate``).
+
+    When :func:`enforce_deadlines` cuts a client, its granted width
+    returns to the pool at its cutoff time and is re-granted to every
+    survivor still on the air, pro rata to their granted widths.
+    Proportional redistribution means all survivors' widths scale by
+    the *same* piecewise-constant factor ``c(t) = 1 + freed(t)/W_surv``
+    (``freed(t)`` = widths of clients cut at or before ``t``), so the
+    new finish of survivor *i* solves ``∫_{tc_i}^{fin} c(t) dt = A_i``
+    with ``A_i`` its original air time — one cumulative segment
+    integral plus two searchsorteds, fully vectorized.
+
+    Runs strictly *after* the verdict: the drop set, tx fractions and
+    billing are computed at the granted widths and are untouched — only
+    survivors finish (weakly) earlier, shrinking the realized barrier.
+    A survivor already off the air before the first cutoff is
+    unchanged.  Returns the per-client new finishes (dropped clients
+    keep theirs)."""
+    f = np.asarray(finish_s, dtype=float)
+    tc = np.asarray(t_comp_s, dtype=float)
+    d = np.broadcast_to(np.asarray(deadline_s, dtype=float), f.shape)
+    w = np.asarray(widths_hz, dtype=float)
+    drop = np.asarray(dropped, dtype=bool)
+    w_surv = float(w[~drop].sum())
+    if not drop.any() or drop.all() or w_surv <= 0.0:
+        return f.copy()
+    cut = np.minimum(f, d)[drop]           # dropped => cut at the deadline
+    order = np.argsort(cut, kind="stable")
+    ts = cut[order]                        # (m,) cutoff breakpoints, sorted
+    c_seg = 1.0 + np.cumsum(w[drop][order]) / w_surv   # factor after ts[k]
+    # cumulative stretched air time at the breakpoints (factor 1 before
+    # the first cutoff): integ[k] = ∫_0^{ts[k]} c(t) dt
+    integ = np.empty_like(ts)
+    integ[0] = ts[0]
+    if ts.size > 1:
+        integ[1:] = ts[0] + np.cumsum(c_seg[:-1] * np.diff(ts))
+
+    def _cum(x: np.ndarray) -> np.ndarray:
+        k = np.searchsorted(ts, x, side="right") - 1
+        kk = np.maximum(k, 0)
+        return np.where(k >= 0, integ[kk] + c_seg[kk] * (x - ts[kk]), x)
+
+    surv = ~drop
+    target = _cum(tc[surv]) + (f[surv] - tc[surv])   # stretched-air budget
+    k = np.searchsorted(integ, target, side="right") - 1
+    kk = np.maximum(k, 0)
+    fin = np.where(k >= 0, ts[kk] + (target - integ[kk]) / c_seg[kk], target)
+    out = f.copy()
+    # c >= 1 makes fin <= f in exact arithmetic; the minimum pins the
+    # "never later than the granted-width finish" invariant bitwise
+    out[surv] = np.minimum(fin, f[surv])
+    return out
+
+
 @dataclass(order=True)
 class Event:
     time: float

@@ -33,6 +33,7 @@ import numpy as np
 from repro.edge.allocation import FleetRoundState, make_policy
 from repro.edge.fleet.state import FleetState
 from repro.edge.runtime import EdgeConfig, EdgeRuntime
+from repro.edge.scenario import make_scenario
 
 
 class FleetEngine:
@@ -80,6 +81,14 @@ class FleetEngine:
             raise ValueError(
                 f"policy {cfg.scheduler!r} has no vectorized form; use "
                 f"backend='exact' (scalar fallback)")
+        # scenario stream at s+4, as in EdgeRuntime — same seed, same
+        # population, so the availability/fault draws match the exact
+        # backend's (bitwise for processes that do not read the clock)
+        self.scenario = (make_scenario(cfg.scenario, self.population,
+                                       seed=s + 4)
+                         if cfg.scenario else None)
+        self._unavailable = 0
+        self._realloc_rounds = 0
         self._clock_s = 0.0
         self._energy_j = 0.0
         self._history: list[dict] = []
@@ -138,7 +147,25 @@ class FleetEngine:
 
         cfg, st = self.cfg, self.state
         st.sample()
-        alive = np.flatnonzero(st.alive_mask())
+        eligible = np.arange(self.population)
+        eff = None
+        if self.scenario is not None:
+            # same sequencing as EdgeRuntime._begin_scenario_round:
+            # availability filters the eligible set pre-policy, faults
+            # are held for the realized side below
+            eff = self.scenario.begin_round(len(self._history),
+                                            self._clock_s, st.battery_j)
+            n_fault = int(eff.fault_off.sum())
+            n_proc = int((eff.proc_off & ~eff.fault_off).sum())
+            self._unavailable += n_proc + n_fault
+            if n_proc:
+                self._drop_reasons["unavailable"] = (
+                    self._drop_reasons.get("unavailable", 0) + n_proc)
+            if n_fault:
+                self._drop_reasons["fault"] = (
+                    self._drop_reasons.get("fault", 0) + n_fault)
+            eligible = eligible[eff.available]
+        alive = eligible[st.alive_mask()[eligible]]
         if alive.size == 0:
             self.last_decision = None
             return self._record(0.0, 0.0, 0, 0, None)
@@ -146,12 +173,17 @@ class FleetEngine:
         budget = (float(cfg.bandwidth_budget_hz)
                   if cfg.bandwidth_budget_hz > 0
                   else float(max(k, 1)) * cfg.channel.bandwidth_hz)
-        t_comp = self.flops / np.maximum(st.flops_per_s[alive], 1.0)
+        mult = None
+        fl_alive = self.flops
+        if eff is not None and eff.has_shedding:
+            mult = eff.workload_frac[alive]
+            fl_alive = self.flops * mult
+        t_comp = fl_alive / np.maximum(st.flops_per_s[alive], 1.0)
         fstate = FleetRoundState(
             k=k, ids=alive, t_comp_s=t_comp,
             spectral_eff=st.channel.spectral_efficiency(alive),
             budget_hz=budget, rng=self.rng, up_bits=8.0 * self.up_bytes,
-            backend="jit")
+            payload_mult=mult, backend="jit")
         dec = self.policy.decide_vectorized(fstate)
         dec.validate()
         self.last_decision = dec
@@ -164,14 +196,30 @@ class FleetEngine:
             return self._record(0.0, 0.0, 0, 0, None)
         sel = alive[dec.positions]
         d_eff = np.minimum(dec.deadline_s_arr, cfg.enforce_deadline_s)
+        # realized-side faults (EdgeRuntime._realized_faults): the grant
+        # was provisioned against the clean draw; the round runs on the
+        # degraded channel / throttled compute
+        snr_sel = st.snr_round[sel]
+        fl_sel = (fl_alive[dec.positions] if mult is not None
+                  else self.flops)
+        t_comp_sel = t_comp[dec.positions]
+        if eff is not None and eff.has_channel_fault:
+            snr_sel = snr_sel * eff.snr_scale[sel]
+        if eff is not None and eff.has_compute_fault:
+            fl_sel = fl_sel * eff.compute_scale[sel]
+            t_comp_sel = fl_sel / np.maximum(st.flops_per_s[sel], 1.0)
+        up_air = (self.up_bytes if mult is None
+                  else self.up_bytes * mult[dec.positions])
         out = kernel.sync_round_jit(
-            dec.bandwidth_hz_arr, st.snr_round[sel],
-            t_comp[dec.positions], self.up_bytes,
-            self.flops * cfg.device.joules_per_flop, d_eff,
+            dec.bandwidth_hz_arr, snr_sel, t_comp_sel, up_air,
+            fl_sel * cfg.device.joules_per_flop, d_eff,
             cfg.deadline_tolerance_s, cfg.channel.tx_power_w,
             max(cfg.channel.server_rate_bps, 1e-6),
-            cfg.device.idle_power_w, st.battery_j[sel])
+            cfg.device.idle_power_w, st.battery_j[sel],
+            bill_bytes=self.up_bytes, reallocate=cfg.reallocate)
         st.fleet.battery_j[sel] = out["battery_j"]
+        if out["n_realloc"]:
+            self._realloc_rounds += 1
         n_drop = out["n_dropped"]
         if n_drop:
             self._dl_dropped += n_drop
@@ -210,4 +258,6 @@ class FleetEngine:
             "in_flight": 0,
             "drop_reasons": dict(self._drop_reasons),
             "phase_s": dict(self._phase),
+            "unavailable_total": self._unavailable,
+            "realloc_rounds": self._realloc_rounds,
         }

@@ -34,7 +34,8 @@ from repro.edge.async_agg import AsyncAggregator
 from repro.edge.channel import Channel, ChannelConfig
 from repro.edge.device import DeviceConfig, DeviceFleet
 from repro.edge.events import (DEADLINE_EXPIRED, DeadlineVerdict, EventClock,
-                               enforce_deadlines)
+                               enforce_deadlines, reallocated_finish)
+from repro.edge.scenario import RoundEffects, Scenario, make_scenario
 from repro.obs import trace as obs
 from repro.obs.metrics import reason_key
 
@@ -90,6 +91,19 @@ class EdgeConfig:
     # emitted only while the cohort fits this cap (the chrome exporter's
     # top_k_clients bounds the file the same way)
     trace_top_k_clients: int = 64
+    # scenario: availability churn + fault injection, a
+    # repro.edge.scenario spec string (e.g. "diurnal:period=600,amp=0.4"
+    # or "markov:p_drop=0.2|snr_burst:prob=0.3,scale=0.25"); None keeps
+    # the static always-reachable fleet.  The scenario draws from its
+    # own seeded stream (seed + cfg.seed + 4), so enabling one never
+    # perturbs the channel/fleet/policy draws of an existing replay.
+    scenario: Optional[str] = None
+    # mid-round re-allocation: when enforce_deadlines cuts a straggler,
+    # re-offer its granted width to the surviving uploaders still on the
+    # air (pro rata, piecewise-constant in time) — the drop set, tx
+    # fractions and billing are unchanged, only the realized barrier
+    # shrinks.  Sync mode; opt-in.
+    reallocate: bool = False
 
     def __post_init__(self):
         if self.fleet not in ("auto", "on", "off"):
@@ -115,6 +129,10 @@ class EdgeRuntime:
         self.channel = Channel(cfg.channel, num_clients, seed=s + 1)
         self.fleet = DeviceFleet(cfg.device, num_clients, seed=s + 2)
         self.rng = np.random.default_rng(s + 3)
+        self.scenario: Optional[Scenario] = (
+            make_scenario(cfg.scenario, num_clients, seed=s + 4)
+            if cfg.scenario else None)
+        self._effects: Optional[RoundEffects] = None  # this round's scenario
         self.clock = EventClock()
         # make_policy drops the knobs a policy does not accept, so every
         # EdgeConfig knob can ride along unconditionally
@@ -143,6 +161,8 @@ class EdgeRuntime:
         self.energy_j = 0.0
         self.dropped_total = 0           # policy exclusions (a priori)
         self.deadline_dropped_total = 0  # runtime cutoffs (at the barrier)
+        self.unavailable_total = 0       # scenario: never answered the round
+        self.realloc_rounds = 0          # rounds where freed width re-landed
         # breakdowns for summary(): why clients never landed (exclusion
         # reason buckets + runtime "deadline" cutoffs), and where the
         # simulated seconds went — maintained unconditionally (cheap),
@@ -268,6 +288,7 @@ class EdgeRuntime:
         up = np.asarray([sum(wire_fn(decision.codec_for(i)))
                          * mult[pos[int(i)]] for i in sel], dtype=float)
         fl_sel = np.asarray([flops[pos[int(i)]] for i in sel], dtype=float)
+        fl_sel = self._realized_faults(sel, fl_sel, decision.bandwidth())
         est_sel = self.estimate(sel, up, fl_sel)
         self._enforce(decision, est_sel, fl_sel)
         return est_sel
@@ -294,6 +315,9 @@ class EdgeRuntime:
                                     tracer=self.tracer, t0=self.clock.now,
                                     round_id=len(self.decisions) - 1)
         decision.dropped.update(verdict.reasons())
+        self._maybe_reallocate(
+            est_sel, verdict,
+            [decision.allocations[int(i)].bandwidth_hz for i in c], d_eff)
         self.deadline_dropped_total += verdict.n_dropped
         if verdict.n_dropped:
             self.drop_reasons["deadline_cutoff"] = (
@@ -322,9 +346,11 @@ class EdgeRuntime:
             payload_mult=payload_mult, backend=self.cfg.fleet_backend)
         return fstate, agg0 + nonagg0
 
-    def _decide_fleet(self, k: int, clients: np.ndarray, wire_fn, fl
+    def _decide_fleet(self, k: int, clients: np.ndarray, wire_fn, fl,
+                      payload_mult=None
                       ) -> tuple[FleetDecision, ClientEstimate]:
-        fstate, tot_bytes = self._fleet_state(k, clients, wire_fn, fl)
+        fstate, tot_bytes = self._fleet_state(k, clients, wire_fn, fl,
+                                              payload_mult=payload_mult)
         decision = self.policy.decide_vectorized(fstate)
         assert decision is not None, \
             f"policy {self.policy.name!r} advertises vectorized=True but " \
@@ -383,7 +409,8 @@ class EdgeRuntime:
         sel = decision.positions
         self.channel.set_bandwidth(decision.ids, decision.bandwidth_hz_arr)
         up = tot_bytes * fstate.mult()[sel]
-        fl_sel = fl[sel]
+        fl_sel = self._realized_faults(decision.ids, fl[sel],
+                                       decision.bandwidth_hz_arr)
         est_sel = self.estimate(decision.ids, up, fl_sel)
         d_eff = np.minimum(decision.deadline_s_arr,
                            self.cfg.enforce_deadline_s)
@@ -399,6 +426,8 @@ class EdgeRuntime:
             tracer=(self.tracer if trace_clients else None),
             t0=self.clock.now, round_id=rid)
         decision.set_verdict(verdict)
+        self._maybe_reallocate(est_sel, verdict, decision.bandwidth_hz_arr,
+                               d_eff)
         self.deadline_dropped_total += verdict.n_dropped
         if verdict.n_dropped:
             self.drop_reasons["deadline_cutoff"] = (
@@ -411,6 +440,132 @@ class EdgeRuntime:
         self.verdicts.append(verdict)
         self._verdict = verdict
         return est_sel
+
+    # -- scenario (repro.edge.scenario): churn, faults, re-allocation --
+    def _begin_scenario_round(self, eligible: np.ndarray, fl: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray,
+                                         Optional[np.ndarray]]:
+        """Draw this round's scenario effects and apply the
+        allocation-visible ones: the availability mask filters the
+        eligible set (absences bucketed ``unavailable`` for the process,
+        ``fault`` for blackout/battery-gate injectors), and workload
+        shedding scales the FLOPs + upload floats every policy sizes
+        against.  Returns the filtered ``(eligible, flops,
+        payload_mult)``; the realized-side faults are held on
+        ``self._effects`` for :meth:`_realized_faults`."""
+        self._effects = None
+        if self.scenario is None:
+            return eligible, fl, None
+        eff = self._effects = self.scenario.begin_round(
+            len(self.decisions), self.clock.now, self.fleet.battery_j)
+        avail = eff.available[eligible]
+        n_fault = int(eff.fault_off[eligible].sum())
+        n_proc = int((eff.proc_off[eligible]
+                      & ~eff.fault_off[eligible]).sum())
+        self.unavailable_total += n_proc + n_fault
+        if n_proc:
+            self.drop_reasons["unavailable"] = (
+                self.drop_reasons.get("unavailable", 0) + n_proc)
+        if n_fault:
+            self.drop_reasons["fault"] = (
+                self.drop_reasons.get("fault", 0) + n_fault)
+        tr = self.tracer
+        if tr.enabled:
+            tr.metrics.gauge("availability_frac").set(
+                float(avail.mean()) if avail.size else 0.0)
+            if n_proc:
+                tr.metrics.counter("excluded_total").inc(
+                    n_proc, reason="unavailable", policy=self.policy.name)
+            if n_fault:
+                tr.metrics.counter("excluded_total").inc(
+                    n_fault, reason="fault", policy=self.policy.name)
+            if (n_fault or eff.has_channel_fault or eff.has_compute_fault
+                    or eff.has_shedding):
+                tr.event(obs.FAULT, obs.CAT_ROUND, self.clock.now,
+                         round_id=len(self.decisions), forced_off=n_fault,
+                         snr_hit=int((eff.snr_scale != 1.0).sum()),
+                         slowed=int((eff.compute_scale != 1.0).sum()),
+                         workload_frac=float(eff.workload_frac.mean()))
+        eligible, fl = eligible[avail], fl[avail]
+        mult = None
+        if eligible.size and eff.has_shedding:
+            mult = eff.workload_frac[eligible]
+            fl = fl * mult
+        return eligible, fl, mult
+
+    def _realized_faults(self, ids, fl_sel: np.ndarray,
+                         widths) -> np.ndarray:
+        """Apply the realized-side scenario faults to a committed
+        cohort: SNR bursts degrade the channel AFTER the grant (the
+        policy provisioned against the clean draw; the granted widths
+        are re-applied at the degraded SNR), and straggler slowdowns
+        scale the realized FLOPs — time and, at fixed power, energy.
+        Returns the (possibly scaled) per-client flops."""
+        eff = self._effects
+        if eff is None:
+            return fl_sel
+        ids = np.asarray(ids, dtype=int)
+        if eff.has_channel_fault:
+            self.channel.scale_snr(eff.snr_scale)
+            self.channel.set_bandwidth(ids, widths)
+        if eff.has_compute_fault:
+            fl_sel = fl_sel * eff.compute_scale[ids]
+        return fl_sel
+
+    def _maybe_reallocate(self, est_sel: ClientEstimate,
+                          verdict: DeadlineVerdict, widths,
+                          d_eff: np.ndarray) -> None:
+        """Opt-in mid-round re-allocation (``cfg.reallocate``): the
+        widths of cut clients re-land on the survivors still on the air
+        (see :func:`repro.edge.events.reallocated_finish`).  Runs
+        strictly after the verdict — the drop set, tx fractions and
+        billing are untouched, so "ledger <= plan" and seeded replays
+        hold — and rewrites the survivors' realized finishes and tx
+        energy in place, so the barrier/idle/battery math downstream
+        sees the shrunk round for free.  Sync mode only (async grants
+        release spectrum through the expiry path instead)."""
+        if (not self.cfg.reallocate or self.async_agg is not None
+                or not verdict.any_dropped
+                or verdict.n_dropped == verdict.clients.size):
+            return
+        w = np.broadcast_to(np.asarray(widths, dtype=float),
+                            verdict.clients.shape)
+        new_fin = reallocated_finish(est_sel.time_s, verdict.t_comp_s,
+                                     verdict.deadline_s, w, verdict.dropped)
+        if not np.any(new_fin < est_sel.time_s):
+            return
+        tr = self.tracer
+        before = (float(np.max(np.minimum(est_sel.time_s, d_eff)))
+                  if tr.enabled else 0.0)
+        dt = est_sel.time_s - new_fin
+        # the freed spectrum re-landed on the survivors mid-round: their
+        # realized subchannel rate rose, so the air-time floor inside
+        # finish_round_sync's server-drain term must see the effective
+        # rate (same bits, less air time), or the stale granted widths
+        # would hold the round open past the shrunk barrier
+        air_old = est_sel.time_s - verdict.t_comp_s
+        air_new = new_fin - verdict.t_comp_s
+        improved = (~verdict.dropped) & (dt > 0.0)
+        scale = np.where(improved & (air_new > 0.0),
+                         air_old / np.maximum(air_new, 1e-300), 1.0)
+        c = est_sel.clients
+        self.channel.rates_bps[c] = self.channel.rates_bps[c] * scale
+        est_sel.energy_j = (est_sel.energy_j
+                            - self.channel.cfg.tx_power_w * dt)
+        est_sel.time_s = new_fin
+        verdict.finish_s = new_fin
+        self.realloc_rounds += 1
+        if tr.enabled:
+            after = float(np.max(np.minimum(new_fin, d_eff)))
+            tr.event(obs.REALLOC, obs.CAT_ROUND, self.clock.now,
+                     round_id=len(self.decisions) - 1,
+                     freed_hz=float(w[verdict.dropped].sum()),
+                     n_dropped=int(verdict.n_dropped),
+                     barrier_before=before, barrier_after=after)
+            tr.metrics.counter("realloc_rounds_total").inc(
+                1, policy=self.policy.name)
+            tr.metrics.histogram("realloc_barrier_saved_s").observe(
+                before - after)
 
     def decide(self, k: int, eligible, wire_fn: Callable, flops,
                summable: bool = True, codec=None
@@ -426,6 +581,12 @@ class EdgeRuntime:
         self._expired_unrecorded += self._release_expired()
         self.channel.sample()
         eligible = np.asarray(eligible, dtype=int)
+        fl = np.broadcast_to(np.asarray(flops, dtype=float), eligible.shape)
+        # scenario availability filters BEFORE the policy runs: no
+        # registered policy can select an unavailable client, and an
+        # all-unavailable round degrades to the standard empty-cohort
+        # round below (clock unchanged, nothing billed)
+        eligible, fl, mult = self._begin_scenario_round(eligible, fl)
         alive = self.fleet.alive(eligible)
         if alive.size == 0:
             decision = RoundDecision(budget_hz=self.budget_hz(k))
@@ -433,14 +594,16 @@ class EdgeRuntime:
             self.verdicts.append(None)
             self._verdict = None
             return [], self._empty_est(), decision
-        fl = np.broadcast_to(np.asarray(flops, dtype=float), eligible.shape)
         keep = np.isin(eligible, alive)
         if self.fleet_active():
-            decision, est_sel = self._decide_fleet(k, eligible[keep],
-                                                   wire_fn, fl[keep])
+            decision, est_sel = self._decide_fleet(
+                k, eligible[keep], wire_fn, fl[keep],
+                payload_mult=None if mult is None else mult[keep])
             return decision.selected, est_sel, decision
         state = self._round_state(k, eligible[keep], wire_fn, fl[keep],
-                                  summable, codec)
+                                  summable, codec,
+                                  payload_mult=None if mult is None
+                                  else mult[keep])
         decision = self.policy.decide(state)
         est_sel = self._apply(decision, state, wire_fn, fl[keep])
         if self.async_agg is not None:
@@ -471,6 +634,20 @@ class EdgeRuntime:
                                       return_counts=True)
         fl_uniq = np.zeros(len(uniq))
         np.add.at(fl_uniq, inv, fl)
+        # scenario: this cohort is externally fixed, so the availability
+        # mask does not filter here (decide() is the selection path) —
+        # but faults still strike: workload shedding scales the
+        # allocation-visible FLOPs/floats now, and the realized-side
+        # faults hit in _apply/_commit_fleet as usual
+        self._effects = None
+        counts = np.asarray(counts, dtype=float)
+        if self.scenario is not None:
+            eff = self._effects = self.scenario.begin_round(
+                len(self.decisions), self.clock.now, self.fleet.battery_j)
+            if eff.has_shedding:
+                frac = eff.workload_frac[uniq]
+                fl_uniq = fl_uniq * frac
+                counts = counts * frac
         if self.fleet_active():
             fstate, tot_bytes = self._fleet_state(
                 len(clients), uniq, wire_fn, fl_uniq, payload_mult=counts)
@@ -771,6 +948,8 @@ class EdgeRuntime:
             "rounds": len(self.history),
             "dropped_total": self.dropped_total,
             "deadline_dropped_total": self.deadline_dropped_total,
+            "unavailable_total": self.unavailable_total,
+            "realloc_rounds": self.realloc_rounds,
             "depleted_clients": int((self.fleet.battery_j <= 0).sum()),
             "in_flight": 0 if self.async_agg is None else self.async_agg.in_flight,
             # why clients never landed, and where the simulated seconds

@@ -116,6 +116,18 @@ class FederatedRun:
         self._eligible_flops: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
+    # checkpoint/resume (repro.checkpoint.run_state): sync-mode runs
+    # round-trip bit-identically — save at a round boundary, restore
+    # into a freshly constructed run with the same configs
+    def save(self, path: str) -> None:
+        from repro.checkpoint import save_run
+        save_run(path, self)
+
+    def restore_from(self, path: str) -> "FederatedRun":
+        from repro.checkpoint import load_run
+        return load_run(path, self)
+
+    # ------------------------------------------------------------------
     # convenience views into the strategy (examples/benchmarks poke these)
     @property
     def params(self):

@@ -161,6 +161,23 @@ class FedStrategy(abc.ABC):
             self._n_params_cache = comm.tree_n_floats(self.params)
         return self._n_params_cache
 
+    # -- checkpoint/resume ----------------------------------------------
+    def state_dict(self) -> dict:
+        """Every server-side array that mutates across rounds, as a
+        pytree ``repro.checkpoint`` round-trips (see
+        :mod:`repro.checkpoint.run_state`).  Default: the ``params``
+        pytree plus ``opt_state`` when the strategy keeps one; override
+        for any extra mutable server state."""
+        sd: dict = {"params": self.params}
+        if hasattr(self, "opt_state"):
+            sd["opt_state"] = self.opt_state
+        return sd
+
+    def load_state_dict(self, state: dict) -> None:
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        if "opt_state" in state:
+            self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+
     # -- one round -------------------------------------------------------
     def round_context(self, datas: Sequence[tuple], rng: Any
                       ) -> Optional[Sequence[Any]]:

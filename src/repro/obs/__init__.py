@@ -27,9 +27,9 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                reason_key)
 from repro.obs.trace import (AGGREGATE, ALLOCATE, CAT_ASYNC, CAT_CLIENT,
                              CAT_ROUND, CAT_WALL, COMPUTE, DISPATCH, DOWNLINK,
-                             EXPIRE, LAND, NULL_TRACER, ROUND, UPLINK,
-                             VERDICT, NullTracer, Span, TraceEvent, Tracer,
-                             render_round)
+                             EXPIRE, FAULT, LAND, NULL_TRACER, REALLOC, ROUND,
+                             UPLINK, VERDICT, NullTracer, Span, TraceEvent,
+                             Tracer, render_round)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "PlanAudit",
@@ -38,6 +38,6 @@ __all__ = [
     "metrics_to_csv", "parse_jsonl", "to_chrome", "to_jsonl",
     "write_bench_json", "write_chrome", "write_jsonl", "write_metrics_csv",
     "AGGREGATE", "ALLOCATE", "CAT_ASYNC", "CAT_CLIENT", "CAT_ROUND",
-    "CAT_WALL", "COMPUTE", "DISPATCH", "DOWNLINK", "EXPIRE", "LAND",
-    "ROUND", "UPLINK", "VERDICT",
+    "CAT_WALL", "COMPUTE", "DISPATCH", "DOWNLINK", "EXPIRE", "FAULT",
+    "LAND", "REALLOC", "ROUND", "UPLINK", "VERDICT",
 ]

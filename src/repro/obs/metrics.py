@@ -50,6 +50,12 @@ def reason_key(reason: str) -> str:
     (metrics labels must have low cardinality; the full prose stays on
     the RoundDecision)."""
     r = reason.lower()
+    # scenario buckets first: their prose mentions "blackout"/"battery"
+    # etc., which must not leak into the policy-exclusion buckets below
+    if "unavailable" in r or "availability" in r:
+        return "unavailable"
+    if "fault" in r or "blackout" in r or "battery-gated" in r:
+        return "fault"
     if "battery" in r:
         return "battery"
     if "energy" in r:

@@ -44,6 +44,8 @@ ROUND = "round"
 DISPATCH = "dispatch"
 LAND = "land"
 EXPIRE = "expire"
+FAULT = "scenario_fault"
+REALLOC = "reallocate"
 
 
 @dataclass(frozen=True)

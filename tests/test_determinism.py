@@ -23,10 +23,10 @@ from repro.fed import strategies
 from repro.fed.server import FederatedRun
 
 MCFG = reduced(FMNIST_CNN)
-POLICIES = ["uniform", "bandwidth_opt", "energy_opt"]
+POLICIES = ["uniform", "bandwidth_opt", "energy_opt", "deadline"]
 ALL_ALGS = sorted(strategies.names())
 # fast lane: one strategy per payload family (summable delta, 2-phase
-# mixed, component/mask) across all three policies
+# mixed, component/mask) across all four policies
 FAST = {("fedavg_sgd", p) for p in POLICIES} | {
     ("fim_lbfgs", "energy_opt"), ("feddane", "uniform"),
     ("fedova", "uniform")}
@@ -90,6 +90,33 @@ def test_fleet_fast_path_bit_identical(alg, policy):
     a = _fingerprint(_run(alg, policy, fleet="off"))
     b = _fingerprint(_run(alg, policy, fleet="on"))
     assert a == b, (alg, policy)
+
+
+# churn scenarios (repro.edge.scenario) the fleet fast path must replay
+# bit-identically: sticky markov sessions, a round-unit diurnal wave, and
+# a composite with realized-side faults + workload shedding — all with
+# mid-round re-allocation on, so the freed-spectrum path is covered too
+SCENARIOS = [
+    "markov:p_drop=0.2,p_join=0.4",
+    "diurnal:period=6,amp=0.5,base=0.6,unit=round",
+    ("markov:p_drop=0.2,p_join=0.4|snr_burst:prob=0.4,scale=0.1|"
+     "data_exclusion:0.7"),
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_fleet_fast_path_bit_identical_under_churn(scenario):
+    """The PR-8 contract extended to ISSUE-9: with availability churn,
+    fault injection, and opt-in re-allocation in play, the fleet fast
+    path must still reproduce the dict path bit-for-bit — scenario draws
+    come from one stream (seed+4) consumed identically by both."""
+    kw = dict(scenario=scenario, reallocate=True, rounds=3)
+    a = _fingerprint(_run("fedavg_sgd", "deadline", fleet="off", **kw))
+    b = _fingerprint(_run("fedavg_sgd", "deadline", fleet="on", **kw))
+    assert a == b
+    # the scenario must actually bite, or the assertion is vacuous
+    c = _fingerprint(_run("fedavg_sgd", "deadline", fleet="off", rounds=3))
+    assert a != c, scenario
 
 
 def test_same_seed_bit_identical_async_expiry_path():

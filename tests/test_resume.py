@@ -1,0 +1,110 @@
+"""Checkpoint/resume (repro.checkpoint.run_state): bit-identical tails.
+
+A sync-mode ``FederatedRun`` saved at a round boundary and restored into
+a freshly constructed run must replay the remaining rounds bit-for-bit:
+same ledger totals, same cohorts/drops, same simulated clock and energy
+— with and without an ``EdgeConfig.scenario`` attached, so the
+availability/fault RNG stream, per-process state (markov chains, trace
+cursors), and the re-allocation counters all round-trip through the
+``.npz`` + sidecar format.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig
+from repro.fed.server import FederatedRun
+
+MCFG = reduced(FMNIST_CNN)
+UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+                       fading="rayleigh", server_rate_bps=50e6)
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+TRAIN, TEST = make_classification(MCFG, n_train=300, n_test=100, seed=0,
+                                  noise=0.5)
+
+SCENARIOS = [
+    None,
+    ("diurnal:period=20,amp=0.4,base=0.7|"
+     "snr_burst:prob=0.3,scale=0.1"),
+    "markov:p_drop=0.2,p_join=0.4|data_exclusion:0.7",
+]
+
+
+def _mk(scenario):
+    edge = EdgeConfig(channel=UPLINK, device=HETERO, scheduler="deadline",
+                      deadline_s=5.0, min_clients=1,
+                      enforce_deadline_s=1.5, scenario=scenario,
+                      reallocate=True)
+    fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                     batch_size=32, rounds=6, noniid_l=2, seed=0, edge=edge)
+    return FederatedRun(MCFG, fcfg, TRAIN, TEST, "fedavg_sgd")
+
+
+def _tail_fp(run, tail=3):
+    """Everything the resumed run must reproduce over its last rounds."""
+    h = run.edge.history[-tail:]
+    return {
+        "ledger": {f: getattr(run.ledger, f)
+                   for f in ("down_bytes", "up_star_bytes", "up_tree_bytes",
+                             "scalar_bytes", "rounds")},
+        "cohorts": [tuple(sorted(d.selected))
+                    for d in run.edge.decisions[-tail:]],
+        "drops": [tuple(sorted(d.dropped))
+                  for d in run.edge.decisions[-tail:]],
+        "wall": [r["wall_s"] for r in h],
+        "cohort_sizes": [r["cohort"] for r in h],
+        "clock_s": run.edge.clock.now,
+        "energy_j": run.edge.energy_j,
+        "params": [np.asarray(p) for p in
+                   (run.params if run.params is not None else [])],
+        "unavailable": run.edge.unavailable_total,
+        "realloc_rounds": run.edge.realloc_rounds,
+    }
+
+
+def _eq(a, b):
+    pa, pb = a.pop("params"), b.pop("params")
+    assert a == b
+    assert len(pa) == len(pb)
+    for x, y in zip(pa, pb):
+        assert np.array_equal(x, y)
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_resume_tail_bit_identical(scenario, tmp_path):
+    straight = _mk(scenario)
+    straight.run(rounds=6, eval_every=6)
+
+    head = _mk(scenario)
+    head.run(rounds=3, eval_every=3)
+    ckpt = str(tmp_path / "ckpt.npz")
+    head.save(ckpt)
+
+    resumed = _mk(scenario).restore_from(ckpt)
+    resumed.run(rounds=3, eval_every=3)
+
+    _eq(_tail_fp(straight), _tail_fp(resumed))
+
+
+def test_resume_restores_counters(tmp_path):
+    run = _mk(SCENARIOS[1])
+    run.run(rounds=4, eval_every=4)
+    ckpt = str(tmp_path / "c.npz")
+    run.save(ckpt)
+    fresh = _mk(SCENARIOS[1]).restore_from(ckpt)
+    assert fresh.edge.clock.now == run.edge.clock.now
+    assert fresh.edge.energy_j == run.edge.energy_j
+    assert fresh.edge.unavailable_total == run.edge.unavailable_total
+    assert fresh.edge.dropped_total == run.edge.dropped_total
+    assert fresh.ledger.up_star_bytes == run.ledger.up_star_bytes
+
+
+def test_resume_rejects_scenario_mismatch(tmp_path):
+    run = _mk(SCENARIOS[1])
+    run.run(rounds=2, eval_every=2)
+    ckpt = str(tmp_path / "c.npz")
+    run.save(ckpt)
+    with pytest.raises(ValueError, match="spec mismatch"):
+        _mk(SCENARIOS[2]).restore_from(ckpt)

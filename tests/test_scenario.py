@@ -1,0 +1,315 @@
+"""repro.edge.scenario: churn, fault injection, mid-round re-allocation.
+
+The ISSUE-9 acceptance surface:
+
+  * availability masks are honored by EVERY registered allocation
+    policy — an off client can neither be selected nor policy-excluded
+    (it never reaches the policy at all);
+  * the fleet fast path stays bit-identical to the per-client dict path
+    under ``diurnal``/``markov`` churn (the test_determinism.py matrix,
+    extended here to the standalone FleetEngine exact↔jit pair);
+  * opt-in re-allocation strictly shrinks the realized barrier on a
+    seeded straggler case — drops, billing, and ``PlanAudit.verify``
+    untouched;
+  * an all-unavailable round satisfies the empty-cohort contract
+    (zero-byte, zero-time round; the run never raises);
+  * the spec-string grammar and the process/fault registries.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import FedConfig
+from repro.configs.paper_models import FMNIST_CNN, reduced
+from repro.data.synthetic import make_classification
+from repro.edge import ChannelConfig, DeviceConfig, EdgeConfig, allocation
+from repro.edge.fleet.engine import FleetEngine
+from repro.edge.runtime import EdgeRuntime
+from repro.edge.scenario import (Diurnal, RoundEffects, Scenario,
+                                 fault_names, make_scenario, parse_spec,
+                                 process_names)
+from repro.fed.server import FederatedRun
+
+MCFG = reduced(FMNIST_CNN)
+UPLINK = ChannelConfig(bandwidth_hz=2e5, snr_db_mean=10.0, snr_db_std=3.0,
+                       fading="rayleigh", server_rate_bps=50e6)
+HETERO = DeviceConfig(flops_per_s_mean=2e9, flops_per_s_sigma=1.0)
+
+# the seeded straggler case every re-allocation assertion runs on:
+# a tight deadline admits few clients (grant = deadline), min_clients
+# force-keeps the rest (grant = inf), and realized-side SNR bursts cut
+# admitted clients mid-flight — freeing width while force-kept
+# stragglers are still on the air
+STRAGGLER = dict(scheduler="deadline", deadline_s=0.2, min_clients=6,
+                 scenario="snr_burst:prob=0.6,scale=0.05")
+STRAGGLER_FLEET = dict(population=16, up_bytes=4000.0, flops=2e8, seed=0)
+
+
+def _rt(population=12, seed=0, **edge_kw):
+    kw = dict(channel=UPLINK, device=HETERO)
+    kw.update(edge_kw)
+    return EdgeRuntime(EdgeConfig(**kw), population, seed=seed)
+
+
+def _decide(rt, k=6):
+    return rt.decide(k, np.arange(rt.num_clients),
+                     lambda codec=None: (4000.0, 0.0), 2e8)
+
+
+# ---------------------------------------------------------------------------
+# availability masks reach every registered policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(allocation.names()))
+def test_masks_honored_by_every_policy(policy, tmp_path):
+    """An unavailable client must never appear in a decision — selected
+    OR excluded — no matter which policy runs: availability filters the
+    eligible set before the policy sees it."""
+    off = {1, 4, 7, 9}
+    trace = tmp_path / "avail.jsonl"
+    trace.write_text(json.dumps({"t": 0.0, "off": sorted(off)}) + "\n")
+    rt = _rt(scheduler=policy, deadline_s=5.0, min_clients=1,
+             battery_floor_j=1.0, adaptive_ratio=0.25,
+             scenario=f"trace:{trace}")
+    for _ in range(3):
+        _, est, dec = _decide(rt)
+        touched = set(dec.selected) | set(dec.excluded)
+        assert touched.isdisjoint(off), (policy, sorted(touched & off))
+        rt.finish_round_sync(est, 4000.0, 0.0)
+    assert rt.unavailable_total == 3 * len(off)
+    assert rt.drop_reasons.get("unavailable") == 3 * len(off)
+
+
+def test_shedding_scales_allocation_visible_workload():
+    """data_exclusion shrinks the FLOPs/payload the policy sizes
+    against, and the estimate's air time with it — nothing is billed
+    differently (the ledger invariant is about the committed plan)."""
+    base = _rt(scheduler="uniform", seed=3)
+    shed = _rt(scheduler="uniform", seed=3, scenario="data_exclusion:0.4")
+    _, est_b, dec_b = _decide(base)
+    _, est_s, dec_s = _decide(shed)
+    assert list(dec_b.selected) == list(dec_s.selected)
+    assert np.all(est_s.time_s <= est_b.time_s)
+    assert np.any(est_s.time_s < est_b.time_s)
+
+
+# ---------------------------------------------------------------------------
+# fleet engine: exact (dict-path) vs jit under churn
+# ---------------------------------------------------------------------------
+CHURN_SPECS = [
+    "markov:p_drop=0.2,p_join=0.4",
+    "diurnal:period=6,amp=0.5,base=0.6,unit=round",
+    ("markov:p_drop=0.2,p_join=0.4|snr_burst:prob=0.6,scale=0.05|"
+     "data_exclusion:0.7"),
+]
+
+
+@pytest.mark.parametrize("spec", CHURN_SPECS)
+@pytest.mark.parametrize("reallocate", [False, True])
+def test_fleet_jit_matches_exact_under_churn(spec, reallocate):
+    """The x64 jit kernel path must agree with the exact (EdgeRuntime)
+    backend under churn + faults + re-allocation: identical cohorts,
+    drop counts, and reason buckets; clocks equal to float tolerance.
+    (Clock-reading processes are pinned to round units here — the
+    bit-exact subset; test_determinism.py covers the dict path.)"""
+    hists, sums = [], []
+    for backend in ("exact", "jit"):
+        cfg = EdgeConfig(channel=UPLINK, device=HETERO, reallocate=reallocate,
+                         scenario=spec, **{k: v for k, v in STRAGGLER.items()
+                                           if k != "scenario"})
+        eng = FleetEngine(cfg, STRAGGLER_FLEET["population"],
+                          up_bytes=STRAGGLER_FLEET["up_bytes"],
+                          flops=STRAGGLER_FLEET["flops"],
+                          seed=STRAGGLER_FLEET["seed"], backend=backend)
+        eng.run(6, 8)
+        hists.append(eng.history)
+        sums.append(eng.summary())
+    for a, b in zip(hists[0], hists[1], strict=True):
+        assert a["cohort"] == b["cohort"]
+        assert a["dropped"] == b["dropped"]
+        assert a["clock_s"] == pytest.approx(b["clock_s"], rel=1e-9)
+    assert sums[0]["drop_reasons"] == sums[1]["drop_reasons"]
+    assert sums[0]["unavailable_total"] == sums[1]["unavailable_total"]
+    assert sums[0]["realloc_rounds"] == sums[1]["realloc_rounds"]
+
+
+# ---------------------------------------------------------------------------
+# re-allocation: strictly smaller realized barrier, same everything else
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["exact", "jit"])
+def test_reallocation_shrinks_barrier(backend):
+    res = {}
+    for realloc in (False, True):
+        cfg = EdgeConfig(channel=UPLINK, device=HETERO, reallocate=realloc,
+                         **STRAGGLER)
+        eng = FleetEngine(cfg, STRAGGLER_FLEET["population"],
+                          up_bytes=STRAGGLER_FLEET["up_bytes"],
+                          flops=STRAGGLER_FLEET["flops"],
+                          seed=STRAGGLER_FLEET["seed"], backend=backend)
+        eng.run(8, 8)
+        res[realloc] = eng
+    off, on = res[False], res[True]
+    # the drop/cohort story is untouched — re-allocation is realized-
+    # side only
+    assert off.dropped_total == on.dropped_total
+    assert off.deadline_dropped_total == on.deadline_dropped_total
+    assert [h["cohort"] for h in off.history] == \
+        [h["cohort"] for h in on.history]
+    bar_off = [h["barrier_s"] for h in off.history if "barrier_s" in h]
+    bar_on = [h["barrier_s"] for h in on.history if "barrier_s" in h]
+    assert all(b <= a + 1e-12 for a, b in zip(bar_off, bar_on, strict=True))
+    assert any(b < a for a, b in zip(bar_off, bar_on))
+    assert on.clock_s < off.clock_s
+    assert on.summary()["realloc_rounds"] > 0
+
+
+def test_reallocation_audit_and_billing_hold():
+    """Through a full traced FederatedRun: PlanAudit.verify still passes
+    with re-allocation on, and billed bytes match the run without it."""
+    train, test = make_classification(MCFG, n_train=300, n_test=100,
+                                      seed=0, noise=0.5)
+    led = {}
+    for realloc in (False, True):
+        edge = EdgeConfig(channel=UPLINK, device=HETERO, reallocate=realloc,
+                          scheduler="deadline", deadline_s=1.0,
+                          min_clients=4,
+                          scenario="snr_burst:prob=0.5,scale=0.05")
+        fcfg = FedConfig(num_clients=8, participation=1.0, local_epochs=1,
+                         batch_size=32, rounds=3, noniid_l=2, seed=0,
+                         edge=edge)
+        tracer = obs.Tracer(sink=lambda line: None)
+        run = FederatedRun(MCFG, fcfg, train, test, "fedavg_sgd",
+                           tracer=tracer)
+        run.run(rounds=3, eval_every=3)
+        tracer.audit.verify(run.ledger)
+        led[realloc] = run.ledger.up_star_bytes
+    assert led[False] == led[True]
+
+
+# ---------------------------------------------------------------------------
+# all-unavailable rounds: the empty-cohort contract
+# ---------------------------------------------------------------------------
+def test_all_unavailable_round_is_empty_cohort():
+    rt = _rt(scheduler="uniform", scenario="blackout:start=0,end=1e9")
+    cohort, est, dec = _decide(rt)
+    assert cohort == [] and dec.n_selected == 0 and est.clients.size == 0
+    rec = rt.finish_round_sync(est, 4000.0, 0.0)
+    assert rec["cohort"] == 0 and rec["wall_s"] == 0.0
+    assert rt.clock.now == 0.0 and rt.energy_j == 0.0
+    assert rt.drop_reasons.get("fault") == 12
+
+
+def test_all_unavailable_round_fleet_jit():
+    cfg = EdgeConfig(channel=UPLINK, device=HETERO, scheduler="uniform",
+                     scenario="blackout:start=0,end=1e9")
+    eng = FleetEngine(cfg, 32, up_bytes=4000.0, flops=2e8, seed=0,
+                      backend="jit")
+    rec = eng.run_round(8)
+    assert rec["cohort"] == 0 and rec["wall_s"] == 0.0
+    assert eng.clock_s == 0.0 and eng.energy_j == 0.0
+
+
+def test_empty_cohort_federated_run_survives():
+    """A FederatedRun whose every round is all-off must complete with a
+    zero-byte ledger (the PR-3/PR-5 empty-cohort contract)."""
+    train, test = make_classification(MCFG, n_train=200, n_test=50,
+                                      seed=0, noise=0.5)
+    edge = EdgeConfig(channel=UPLINK, device=HETERO,
+                      scenario="blackout:start=0,end=1e9")
+    fcfg = FedConfig(num_clients=6, participation=1.0, local_epochs=1,
+                     batch_size=32, rounds=2, noniid_l=2, seed=0, edge=edge)
+    run = FederatedRun(MCFG, fcfg, train, test, "fedavg_sgd")
+    run.run(rounds=2, eval_every=2)
+    assert run.ledger.up_star_bytes == 0.0
+    assert run.edge.clock.now == 0.0
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + registries
+# ---------------------------------------------------------------------------
+def test_registries_list_builtins():
+    assert {"always_on", "diurnal", "markov", "trace"} <= \
+        set(process_names())
+    assert {"blackout", "snr_burst", "straggler", "battery_gate",
+            "data_exclusion"} <= set(fault_names())
+
+
+def test_parse_spec_components():
+    avail, faults = parse_spec(
+        "diurnal:period=600,amp=0.3,base=0.7,unit=round|"
+        "snr_burst:prob=0.2,scale=0.5|data_exclusion:0.5")
+    assert avail.name == "diurnal" and avail.period == 600.0
+    assert avail.unit == "round"
+    assert [f.name for f in faults] == ["snr_burst", "data_exclusion"]
+    assert faults[1].thresh == 0.5          # positional form
+    # default process when the spec names only faults
+    avail, _ = parse_spec("snr_burst:prob=0.1")
+    assert avail.name == "always_on"
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("diurnal|markov", "two"),
+    ("waterfilling", "unknown scenario component"),
+    ("snr_burst:prob=0.1,nope=2", "does not accept"),
+    ("snr_burst:prob=0.1,x", "key=val"),
+    ("diurnal:unit=hours", "unit"),
+    ("data_exclusion:0", "threshold"),
+])
+def test_parse_spec_rejects(bad, match):
+    with pytest.raises(ValueError, match=match):
+        parse_spec(bad)
+
+
+def test_make_scenario_population_checks():
+    sc = make_scenario("markov:p_drop=0.1,p_join=0.3", 16, seed=1)
+    assert isinstance(sc, Scenario)
+    assert make_scenario(sc, 16) is sc
+    with pytest.raises(ValueError, match="population"):
+        make_scenario(sc, 32)
+
+
+def test_trace_process_requires_sorted_records(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text(json.dumps({"t": 5.0, "off": [0]}) + "\n"
+                 + json.dumps({"t": 1.0, "on": [0]}) + "\n")
+    with pytest.raises(ValueError, match="sorted"):
+        parse_spec(f"trace:{p}")
+
+
+def test_diurnal_round_unit_ignores_clock():
+    """unit='round' must be invariant to the simulated time handed in —
+    the property Part F's A/B comparison and jit parity rely on."""
+    pop = 64
+    masks = []
+    for t in (0.0, 1234.5):
+        d = Diurnal(period=8, amp=0.5, base=0.6, unit="round")
+        rng = np.random.default_rng(7)
+        d.reset(pop, rng)
+        masks.append([d.mask(i, t * (i + 1), rng) for i in range(5)])
+    for a, b in zip(*masks, strict=True):
+        assert np.array_equal(a, b)
+
+
+def test_scenario_rng_stream_is_isolated():
+    """Enabling a scenario must not perturb the channel/fleet/cohort
+    draws: the same seed with and without a scenario yields the same
+    selected cohorts whenever everyone happens to be available."""
+    a = _rt(scheduler="uniform", seed=5)
+    b = _rt(scheduler="uniform", seed=5, scenario="always_on")
+    for _ in range(3):
+        _, est_a, dec_a = _decide(a)
+        _, est_b, dec_b = _decide(b)
+        assert list(dec_a.selected) == list(dec_b.selected)
+        assert np.array_equal(est_a.time_s, est_b.time_s)
+        a.finish_round_sync(est_a, 4000.0, 0.0)
+        b.finish_round_sync(est_b, 4000.0, 0.0)
+
+
+def test_round_effects_composition():
+    eff = RoundEffects(proc_off=np.array([True, False, False]),
+                       fault_off=np.array([False, True, False]),
+                       snr_scale=np.ones(3), compute_scale=np.ones(3),
+                       workload_frac=np.ones(3))
+    assert list(eff.available) == [False, False, True]
+    assert not eff.has_channel_fault and not eff.has_shedding
