@@ -4,18 +4,81 @@ On this CPU container the numbers time the pure-jnp reference paths (the
 Pallas kernels execute only under interpret=True, whose timing is
 meaningless); the derived column reports achieved GB/s or GFLOP/s so the
 CPU baseline is comparable against the analytic v5e roofline targets.
+
+The codec-encode rows pit the bucketed threshold-select (the fused
+algorithm TopKCodec now ships) against the ``jax.lax.top_k`` global sort
+it replaced — the sort survives *only here*, as the baseline — and the
+fused one-pass int8 round-trip against the historical two-step
+quantize/dequantize pair.
+
+Every run is regression-compared against the committed
+``BENCH_kernels.json`` snapshot *before* overwriting it: a row whose
+median wall-time exceeds 2x its committed value fails the run (the CI
+kernels-bench smoke lane turns this into a red build).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import argparse
+import json
+import os
+import sys
 
-from repro.kernels import ref
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
 
-from benchmarks.common import emit, emit_json, time_call
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.common import emit, emit_json, time_call  # noqa: E402
+
+from repro.fed import codecs  # noqa: E402  (common inserts src/ on path)
+from repro.kernels import ref  # noqa: E402
+
+# wall-time may regress this much vs the committed snapshot before the
+# run fails (headroom for machine-to-machine noise on CPU runners)
+REGRESSION_FACTOR = 2.0
+
+_SNAPSHOT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_kernels.json")
 
 
-def run(quick: bool = True):
+def _topk_sort_baseline(flat, k: int):
+    """The O(n log n) encode path this repo retired from TopKCodec._keep,
+    kept only as the benchmark baseline for the bucketed select."""
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return jnp.where(mask, flat, jnp.zeros_like(flat))
+
+
+def _load_snapshot():
+    """-> {row_name: us_per_call} from the committed BENCH_kernels.json
+    (empty when absent/unreadable — first run on a fresh clone)."""
+    try:
+        with open(_SNAPSHOT) as f:
+            doc = json.load(f)
+        return {r[0]: float(r[1]) for r in doc.get("rows", [])}
+    except (OSError, ValueError, IndexError):
+        return {}
+
+
+def _check_regressions(rows, committed) -> list[str]:
+    """-> human-readable failures for rows >REGRESSION_FACTOR x slower
+    than their committed counterpart (new rows are skipped)."""
+    failures = []
+    for name, us, _ in rows:
+        old = committed.get(name)
+        if old is not None and float(us) > REGRESSION_FACTOR * old:
+            failures.append(
+                f"{name}: {us}us vs committed {old}us "
+                f"(>{REGRESSION_FACTOR}x)")
+    return failures
+
+
+def run(smoke: bool = False):
+    """Smoke mode keeps every row (names must match the committed
+    snapshot for the regression guard to bite) but halves the timing
+    iterations; row sizes are identical in both modes."""
+    iters = 3 if smoke else 5
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -24,7 +87,7 @@ def run(quick: bool = True):
         g = jax.random.normal(key, (B, D), jnp.float32)
         old = jnp.zeros((D,), jnp.float32)
         fn = jax.jit(lambda g, o: ref.fim_diag_ref(g, o, 0.9))
-        us = time_call(fn, g, old)
+        us = time_call(fn, g, old, iters=iters)
         gbps = (B * D * 4 + 2 * D * 4) / (us * 1e-6) / 1e9
         rows.append([f"fim_diag_B{B}_D{D}", round(us, 1), f"{gbps:.2f}GB/s"])
 
@@ -32,9 +95,41 @@ def run(quick: bool = True):
     for n, D in [(21, 1_048_576)]:
         basis = jax.random.normal(key, (n, D), jnp.float32)
         fn = jax.jit(ref.vlbfgs_gram_ref)
-        us = time_call(fn, basis)
+        us = time_call(fn, basis, iters=iters)
         gbps = n * D * 4 / (us * 1e-6) / 1e9
         rows.append([f"vlbfgs_gram_n{n}_D{D}", round(us, 1), f"{gbps:.2f}GB/s"])
+
+    # codec encode: bucketed threshold select (shipped) vs global sort
+    # (retired baseline); 2 streaming passes vs an O(n log n) sort
+    for D in [262_144, 1_048_576]:
+        k = max(1, D // 100)  # the 1% sparsifier setting
+        flat = jax.random.normal(jax.random.PRNGKey(D), (D,), jnp.float32)
+        fused = jax.jit(lambda x, kk=k: ref.topk_select_ref(x, kk))
+        baseline = jax.jit(lambda x, kk=k: _topk_sort_baseline(x, kk))
+        us_f = time_call(fused, flat, iters=iters)
+        us_s = time_call(baseline, flat, iters=iters)
+        gbps = 2 * D * 4 / (us_f * 1e-6) / 1e9
+        rows.append([f"topk_fused_D{D}", round(us_f, 1), f"{gbps:.2f}GB/s"])
+        rows.append([f"topk_sort_D{D}", round(us_s, 1),
+                     f"{us_s / us_f:.2f}x_fused"])
+
+    # codec encode: fused int8 round-trip vs the two-step wire pair
+    for D in [1_048_576]:
+        x = jax.random.normal(jax.random.PRNGKey(D + 1), (D,), jnp.float32)
+        u = jax.random.uniform(jax.random.PRNGKey(2), (D,))
+        fused = jax.jit(ref.int8_roundtrip_ref)
+
+        def unfused(tree, key):
+            return codecs.dequantize_tree(*codecs.quantize_tree(tree, key))
+
+        unfused_fn = jax.jit(unfused)
+        us_f = time_call(fused, x, u, iters=iters)
+        us_u = time_call(unfused_fn, {"w": x}, jax.random.PRNGKey(3),
+                         iters=iters)
+        gbps = 2 * D * 4 / (us_f * 1e-6) / 1e9
+        rows.append([f"int8_fused_D{D}", round(us_f, 1), f"{gbps:.2f}GB/s"])
+        rows.append([f"int8_unfused_D{D}", round(us_u, 1),
+                     f"{us_u / us_f:.2f}x_fused"])
 
     # flash attention ref: compute-bound
     for B, H, KV, S, hd in [(1, 8, 2, 1024, 64)]:
@@ -43,15 +138,33 @@ def run(quick: bool = True):
         k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
         v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
         fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
-        us = time_call(fn, q, k, v)
+        us = time_call(fn, q, k, v, iters=iters)
         flops = 4 * B * H * S * S * hd
         rows.append([f"flash_ref_B{B}H{H}S{S}", round(us, 1),
                      f"{flops / (us * 1e-6) / 1e9:.2f}GFLOP/s"])
 
+    # read the committed snapshot BEFORE emit_json overwrites it
+    committed = _load_snapshot()
+    failures = _check_regressions(rows, committed)
+
     header = ["name", "us_per_call", "derived"]
-    emit_json("kernels", rows, header=header, meta={"quick": bool(quick)})
-    return emit(rows, header, "kernels_bench")
+    emit_json("kernels", rows, header=header,
+              meta={"mode": "smoke" if smoke else "full"})
+    path = emit(rows, header, "kernels_bench")
+    if failures:
+        print("PERF REGRESSION vs committed BENCH_kernels.json:")
+        for f in failures:
+            print(f"  {f}")
+        raise SystemExit(1)
+    compared = sum(1 for r in rows if r[0] in committed)
+    print(f"regression check: {compared}/{len(rows)} rows compared, "
+          f"all within {REGRESSION_FACTOR}x of the committed snapshot")
+    return path
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: same rows, fewer timing iterations")
+    args = ap.parse_args()
+    sys.exit(0 if run(smoke=args.smoke) else 1)

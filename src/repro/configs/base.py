@@ -158,6 +158,11 @@ class FedConfig:
                                  # "randk[:ratio]" — or any registered name
     fim_mode: str = "per_example"  # Eq. 9 diagonal: "per_example" (exact)
                                    # | "microbatch" (squared-grad proxy)
+    kernels: str = "auto"        # Pallas fast path for codec encode and
+                                 # the quasi-Newton core (repro.kernels):
+                                 # "auto" (native on TPU, jnp oracle
+                                 # elsewhere) | "on" (kernel everywhere,
+                                 # interpret off-TPU) | "off" (oracle)
     prox_mu: float = 0.1         # FedProx proximal coefficient
     seed: int = 0
     # Optional resource-constrained edge simulation (repro.edge): wireless
@@ -173,6 +178,10 @@ class FedConfig:
             codecs.make(self.compress)
         except ValueError as e:
             raise ValueError(f"FedConfig.compress: {e}") from None
+        if self.kernels not in ("auto", "on", "off"):
+            raise ValueError(
+                f"FedConfig.kernels must be 'auto', 'on' or 'off', "
+                f"got {self.kernels!r}")
         if self.fim_mode not in ("per_example", "microbatch"):
             raise ValueError(
                 f"FedConfig.fim_mode must be 'per_example' or 'microbatch', "

@@ -21,6 +21,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 
 
 class FimState(NamedTuple):
@@ -35,16 +36,35 @@ def init(params, dtype=jnp.float32) -> FimState:
     )
 
 
-def per_example_diag(per_example_loss: Callable, params, xs, ys):
+def _leaf_diag(g2, kernels: str):
+    """(B, D) per-example gradients -> (D,) mean of squares, via the
+    fused Pallas op (repro.kernels.ops).  With old=0 and ema=0 the fused
+    Γ update reduces to exactly mean_b g² — bit-identical to the inline
+    jnp expression on the oracle path."""
+    zeros = jnp.zeros((g2.shape[1],), jnp.float32)
+    return kernel_ops.fim_diag_update(g2, zeros, 0.0, mode=kernels)
+
+
+def per_example_diag(per_example_loss: Callable, params, xs, ys,
+                     kernels: str = "off"):
     """Exact diagonal empirical Fisher: mean over the batch of squared
-    per-example gradients.  ``per_example_loss(params, x, y) -> scalar``."""
+    per-example gradients.  ``per_example_loss(params, x, y) -> scalar``.
+
+    ``kernels`` routes the square+mean through the fused Pallas op
+    (repro.kernels.ops.fim_diag_update); "off"/non-TPU "auto" resolve to
+    the bit-identical jnp oracle."""
     grads = jax.vmap(lambda x, y: jax.grad(per_example_loss)(params, x, y))(xs, ys)
-    return jax.tree.map(lambda g: jnp.mean(jnp.square(g.astype(jnp.float32)), axis=0), grads)
+    return jax.tree.map(
+        lambda g: _leaf_diag(g.reshape(g.shape[0], -1),
+                             kernels).reshape(g.shape[1:]), grads)
 
 
-def microbatch_diag(grad):
-    """Squared (micro)batch gradient — one term of the accumulation mean."""
-    return jax.tree.map(lambda g: jnp.square(g.astype(jnp.float32)), grad)
+def microbatch_diag(grad, kernels: str = "off"):
+    """Squared (micro)batch gradient — one term of the accumulation mean
+    (a B=1 instance of the same fused Γ op)."""
+    return jax.tree.map(
+        lambda g: _leaf_diag(g.reshape(1, -1), kernels).reshape(g.shape),
+        grad)
 
 
 def update(state: FimState, new_diag, ema: float) -> FimState:

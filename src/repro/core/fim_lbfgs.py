@@ -38,6 +38,13 @@ class FimLbfgsConfig(NamedTuple):
     state_dtype: jnp.dtype = jnp.float32  # Fisher EMA + s/y temporaries;
                                           # bf16 at LLM scale (f32 copies of
                                           # 132B params dominate collectives)
+    kernels: str = "off"            # Pallas fast path for the Gram matrix
+                                    # (repro.kernels.ops.vlbfgs_gram).
+                                    # "off" by default: the kernel basis
+                                    # ravels the history, which would
+                                    # all-gather sharded LLM-scale state
+                                    # (see lbfgs.gram_matrix); federated
+                                    # strategies pass FedConfig.kernels
 
 
 class FimLbfgsState(NamedTuple):
@@ -78,8 +85,9 @@ def update(
 
     fim_state = fim.update(state.fim, fim_diag, cfg.fim_ema)
 
-    # Alg. 1 line 6: p_t = -H_t ḡ  (vector-free two-loop).
-    p = lbfgs.direction(state.history, grad)
+    # Alg. 1 line 6: p_t = -H_t ḡ  (vector-free two-loop; the Gram matrix
+    # runs through the Pallas kernel when cfg.kernels enables it).
+    p = lbfgs.direction(state.history, grad, kernels=cfg.kernels)
 
     if cfg.max_step_norm:
         # trust region on the actual step ||η p_t|| (not the raw direction)

@@ -21,6 +21,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+
 
 class History(NamedTuple):
     s: object            # pytree, leaves (m, ...) — parameter deltas
@@ -160,10 +162,38 @@ def combine(h: History, g, delta):
     return jax.tree.map(leaf, h.s, h.y, g)
 
 
-def direction(h: History, g):
-    """Full VL-BFGS step: p = -H_t g (Alg. 1 line 6)."""
+def _gram_via_kernel(h: History, g, kernels: str):
+    """Gram matrix through the blocked Pallas kernel: materialize the
+    (2m+1, D) basis [s_0.., y_0.., g] by raveling every history leaf.
+
+    This is the single-host/paper-scale fast path — the reshape+concat
+    that ``gram_matrix`` deliberately avoids is exactly what lets one
+    pallas_call read each basis element once.  At LLM scale (sharded
+    history) keep ``kernels="off"``: merging sharded dims would force an
+    all-gather (see gram_matrix)."""
+    def rows(tree):
+        return jnp.concatenate(
+            [leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+             for leaf in jax.tree.leaves(tree)], axis=1)
+
+    gflat = jnp.concatenate(
+        [leaf.ravel().astype(jnp.float32) for leaf in jax.tree.leaves(g)])
+    basis = jnp.concatenate([rows(h.s), rows(h.y), gflat[None]], axis=0)
+    return kernel_ops.vlbfgs_gram(basis, mode=kernels)
+
+
+def direction(h: History, g, kernels: str = "off"):
+    """Full VL-BFGS step: p = -H_t g (Alg. 1 line 6).
+
+    ``kernels`` ("auto" | "on" | "off", FimLbfgsConfig.kernels) routes
+    the Gram matrix through repro.kernels.ops.vlbfgs_gram; "off" (the
+    default, and the right setting for sharded LLM-scale history) keeps
+    the per-leaf all-gather-free ``gram_matrix`` path."""
     m = jax.tree.leaves(h.s)[0].shape[0]
-    M = gram_matrix(h, g)
+    if kernel_ops.resolve(kernels) == "oracle":
+        M = gram_matrix(h, g)
+    else:
+        M = _gram_via_kernel(h, g, kernels)
     delta = direction_coeffs(M, h.idx, h.count, m)
     return combine(h, g, delta)
 

@@ -17,19 +17,23 @@ from repro.core import baselines, fim
 
 
 def make_grad_fim_fn(loss_fn: Callable, per_example_loss: Callable | None,
-                     fim_mode: str = "per_example"):
+                     fim_mode: str = "per_example", kernels: str = "off"):
     """Client update for Algorithm 1: returns (grad, Γ_k, loss).
 
     loss_fn(params, batch) -> scalar; per_example_loss(params, x, y) ->
-    scalar (needed for the exact Eq. 9 diagonal)."""
+    scalar (needed for the exact Eq. 9 diagonal).  ``kernels``
+    (FedConfig.kernels) routes the Fisher square+mean through the fused
+    Pallas op (repro.kernels.ops.fim_diag_update)."""
 
     @jax.jit
     def client_grad_fim(params, batch):
         loss, grad = jax.value_and_grad(loss_fn)(params, batch)
         if fim_mode == "per_example" and per_example_loss is not None:
-            diag = fim.per_example_diag(per_example_loss, params, batch["x"], batch["y"])
+            diag = fim.per_example_diag(per_example_loss, params,
+                                        batch["x"], batch["y"],
+                                        kernels=kernels)
         else:
-            diag = fim.microbatch_diag(grad)
+            diag = fim.microbatch_diag(grad, kernels=kernels)
         return grad, diag, loss
 
     return client_grad_fim

@@ -56,6 +56,7 @@ import jax.flatten_util
 import jax.numpy as jnp
 
 from repro.fed import comm
+from repro.kernels import ops as kernel_ops
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +72,12 @@ class PayloadCodec(abc.ABC):
     name: str = ""            # filled in by ``register``
     sparsifying: bool = False  # zeroes coordinates -> needs summable payloads
     error_feedback: bool = False  # returns a residual for the caller to keep
+    # Pallas fast-path knob for the encode hot loop ("auto" | "on" |
+    # "off", see repro.kernels.ops.resolve); ``make(spec, kernels=...)``
+    # overrides per instance from FedConfig.kernels.  Every mode computes
+    # bit-identical keep sets / quantized values, so plan==ledger billing
+    # and the error-feedback algebra cannot depend on the knob.
+    kernels: str = "auto"
 
     @property
     def identity(self) -> bool:
@@ -109,7 +116,10 @@ class NoneCodec(PayloadCodec):
 
 
 # ---------------------------------------------------------------------------
-# int8 stochastic-rounding quantization (moved here from fed/comm.py)
+# int8 stochastic-rounding quantization (moved here from fed/comm.py).
+# quantize/dequantize_tree remain the explicit two-step wire form (int8
+# payload + scales); Int8Codec's simulation round-trip uses the fused
+# kernel path in repro.kernels, which reproduces this pair bit-for-bit.
 # ---------------------------------------------------------------------------
 def quantize_tree(tree, key):
     """-> (int8 tree, scales tree). Unbiased: stochastic rounding."""
@@ -137,14 +147,22 @@ def dequantize_tree(q_tree, scales):
 class Int8Codec(PayloadCodec):
     """Per-tensor symmetric int8 with stochastic rounding: 4x fewer
     upload bytes, unbiased per round (E[dequant(quant(x))] = x), so no
-    error-feedback residual is needed."""
+    error-feedback residual is needed.
+
+    The round-trip runs the fused Pallas kernel where the ``kernels``
+    knob resolves to one (repro.kernels.ops.int8_roundtrip); the key
+    split and uniform draws match ``quantize_tree`` exactly, so every
+    dispatch path reproduces the historical codec bit-for-bit."""
 
     def wire_bytes(self, n_floats: float) -> float:
         return float(n_floats) * comm.BYTES_INT8
 
     def roundtrip(self, tree, key, residual=None):
-        q, s = quantize_tree(tree, key)
-        return dequantize_tree(q, s), None
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [kernel_ops.int8_roundtrip(leaf, k, mode=self.kernels)
+               for leaf, k in zip(leaves, keys, strict=True)]
+        return jax.tree_util.tree_unflatten(treedef, out), None
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +196,11 @@ class _SparsifyingCodec(PayloadCodec):
         return f"{self.name}:{self.ratio:g}"
 
     def _k(self, size: int) -> int:
+        # an empty payload keeps 0 coordinates — matching wire_bytes(0)
+        # == 0; the old max(1, ...) floor claimed one kept element that
+        # does not exist (and jax.lax.top_k crashes on zero-size input)
+        if size <= 0:
+            return 0
         return max(1, min(int(size), math.ceil(self.ratio * size)))
 
     def _keep(self, flat, k: int, key):
@@ -187,6 +210,10 @@ class _SparsifyingCodec(PayloadCodec):
         if residual is not None:
             tree = jax.tree.map(jnp.add, tree, residual)
         flat, unravel = jax.flatten_util.ravel_pytree(tree)
+        if self._k(flat.size) == 0:
+            # zero-element no-op round-trip: nothing crosses the wire,
+            # nothing is dropped, so the residual is (empty) zeros
+            return tree, jax.tree.map(jnp.zeros_like, tree)
         sent = unravel(self._keep(flat, self._k(flat.size), key))
         new_residual = jax.tree.map(jnp.subtract, tree, sent)
         return sent, new_residual
@@ -201,8 +228,10 @@ class TopKCodec(_SparsifyingCodec):
         return math.ceil(self.ratio * float(n_floats)) * 8.0
 
     def _keep(self, flat, k: int, key):
-        _, idx = jax.lax.top_k(jnp.abs(flat), k)
-        return jnp.zeros_like(flat).at[idx].set(flat[idx])
+        # bucketed threshold select (repro.kernels): O(n) streaming, no
+        # global sort; exactly k coordinates survive, threshold-bucket
+        # ties breaking by index order on every dispatch path
+        return kernel_ops.topk_select(flat, k, mode=self.kernels)
 
 
 class RandKCodec(_SparsifyingCodec):
@@ -250,21 +279,34 @@ def names() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def make(spec: str | PayloadCodec) -> PayloadCodec:
+def make(spec: str | PayloadCodec,
+         kernels: Optional[str] = None) -> PayloadCodec:
     """Build a codec from a ``FedConfig.compress`` spec: a PayloadCodec
     instance (returned as-is) or a ``"name"`` / ``"name:param"`` string,
-    e.g. ``"int8"``, ``"topk:0.05"``."""
+    e.g. ``"int8"``, ``"topk:0.05"``.
+
+    ``kernels`` (FedConfig.kernels: "auto" | "on" | "off") selects the
+    Pallas fast path for the encode hot loop; None keeps the codec's
+    class default ("auto")."""
     if isinstance(spec, PayloadCodec):
-        return spec
-    if not isinstance(spec, str):
-        raise ValueError(
-            f"codec spec must be a string or PayloadCodec, got {spec!r}")
-    name, _, arg = spec.partition(":")
-    factory = get(name)
-    try:
-        return factory(float(arg)) if arg else factory()
-    except (TypeError, ValueError) as e:
-        raise ValueError(f"bad codec spec {spec!r}: {e}") from None
+        codec = spec
+    else:
+        if not isinstance(spec, str):
+            raise ValueError(
+                f"codec spec must be a string or PayloadCodec, got {spec!r}")
+        name, _, arg = spec.partition(":")
+        factory = get(name)
+        try:
+            codec = factory(float(arg)) if arg else factory()
+        except (TypeError, ValueError) as e:
+            raise ValueError(f"bad codec spec {spec!r}: {e}") from None
+    if kernels is not None:
+        if kernels not in kernel_ops.MODES:
+            raise ValueError(
+                f"codec kernels mode must be one of {kernel_ops.MODES}, "
+                f"got {kernels!r}")
+        codec.kernels = kernels
+    return codec
 
 
 def achieved_ratio(codec: PayloadCodec, n_floats: float) -> float:

@@ -124,8 +124,10 @@ class FedStrategy(abc.ABC):
         self.fcfg = fed_cfg
         self.n_classes = n_classes
         # the run's payload codec (FedConfig.compress); _make_plan attaches
-        # it to payload-carrying phases so wire bytes flow everywhere
-        self.codec = codecs.make(fed_cfg.compress)
+        # it to payload-carrying phases so wire bytes flow everywhere.
+        # FedConfig.kernels selects the Pallas encode fast path
+        self.codec = codecs.make(fed_cfg.compress,
+                                 kernels=getattr(fed_cfg, "kernels", None))
         self._n_params_cache: Optional[int] = None
         self._plan_cache: Optional[RoundPlan] = None
         self._build(jax.random.PRNGKey(fed_cfg.seed))

@@ -28,7 +28,8 @@ class FedDaneStrategy(FedStrategy):
             return cnn.softmax_loss(p, self.mcfg, b)
         self._loss = _loss
         self._grad_fim = fed_client.make_grad_fim_fn(
-            self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode)
+            self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode,
+            kernels=getattr(self.fcfg, "kernels", "auto"))
         self._dane = fed_client.make_feddane_fn(self._loss)
         self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, self.mcfg, x, y))
         # the context phase's gradient uploads route through the codec too

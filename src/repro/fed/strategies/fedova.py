@@ -40,17 +40,18 @@ class FedOvaStrategy(FedStrategy):
         self._local_sgd = fed_client.make_local_sgd_fn(self._binary_loss)
         self._apply = jax.jit(lambda p, x: cnn.apply(p, bcfg, x))
         if self.server_opt == "fim_lbfgs":
+            kernels = getattr(self.fcfg, "kernels", "auto")
             self.ocfg = fim_lbfgs.FimLbfgsConfig(
                 learning_rate=self.fcfg.second_order_lr, m=self.fcfg.lbfgs_m,
                 damping=self.fcfg.fim_damping, fim_ema=self.fcfg.fim_ema,
-                max_step_norm=self.fcfg.max_step_norm)
+                max_step_norm=self.fcfg.max_step_norm, kernels=kernels)
             one = jax.tree.map(lambda leaf: leaf[0], self.model.components)
             self.opt_state = jax.vmap(
                 lambda _: fim_lbfgs.init(one, self.ocfg))(
                     jnp.arange(self.n_classes))
             self._grad_fim = fed_client.make_grad_fim_fn(
                 self._binary_loss, cnn.per_example_loss_fn(bcfg, binary=True),
-                self.fcfg.fim_mode)
+                self.fcfg.fim_mode, kernels=kernels)
 
     def n_params(self) -> int:
         """One binary component (the broadcast/upload unit)."""

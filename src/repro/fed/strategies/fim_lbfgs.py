@@ -24,12 +24,14 @@ class FimLbfgsStrategy(FedStrategy):
         def _loss(p, b):
             return cnn.softmax_loss(p, self.mcfg, b)
         self._loss = _loss
+        kernels = getattr(self.fcfg, "kernels", "auto")
         self._grad_fim = fed_client.make_grad_fim_fn(
-            self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode)
+            self._loss, cnn.per_example_loss_fn(self.mcfg), self.fcfg.fim_mode,
+            kernels=kernels)
         self.ocfg = fim_lbfgs.FimLbfgsConfig(
             learning_rate=self.fcfg.second_order_lr, m=self.fcfg.lbfgs_m,
             damping=self.fcfg.fim_damping, fim_ema=self.fcfg.fim_ema,
-            max_step_norm=self.fcfg.max_step_norm)
+            max_step_norm=self.fcfg.max_step_norm, kernels=kernels)
         self.opt_state = fim_lbfgs.init(self.params, self.ocfg)
         self._eval = jax.jit(lambda p, x, y: cnn.accuracy(p, self.mcfg, x, y))
 

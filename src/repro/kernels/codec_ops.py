@@ -1,0 +1,178 @@
+"""Pallas TPU kernels for the wire codecs (fed/codecs.py hot path).
+
+Two encode primitives sit on every upload's critical path:
+
+  * ``int8_roundtrip`` — fused per-tensor symmetric int8 with stochastic
+    rounding: scale, floor, uniform-compare, clip and dequantize run in
+    one ``pallas_call`` over the flattened payload, so the tensor is
+    read+written once instead of the unfused oracle's per-op passes.
+    The rounding uniforms are drawn *outside* the kernel with the same
+    ``jax.random.uniform`` stream as the oracle, and the per-tensor
+    scale is precomputed by the caller (an exact f32 max reduction plus
+    one division) and passed in — constant-divisor divisions compiled
+    *inside* a kernel may round 1 ulp away from the eager oracle, while
+    every op the kernel performs on the shared scale (dynamic divide,
+    floor, compare, clip, multiply) is exact or correctly rounded, so
+    kernel and oracle are bit-identical — the codec tests assert exact
+    equality.
+
+  * ``topk_select`` — threshold-select top-k without a global sort.  The
+    magnitude order of nonnegative f32 values equals the integer order of
+    their bit patterns, so bucketing on the top ``32 - TOPK_SHIFT`` bits
+    of ``bitcast(|x|)`` is an order-preserving radix: pass 1 histograms
+    the payload into ``TOPK_BUCKETS`` buckets, a 512-entry reversed
+    cumsum picks the threshold bucket ``t`` (the coarsest bucket whose
+    suffix count still reaches ``k``), pass 2 keeps every element above
+    ``t`` plus the first ``k - count(>t)`` tie-bucket elements in index
+    order (a running SMEM counter across the sequential grid).  Exactly
+    ``k`` coordinates survive — the ``wire_bytes`` billing invariant —
+    and both passes are O(n) streaming, versus the O(n log n) global
+    ``jax.lax.top_k`` it replaces.
+
+Dispatch (TPU-native / interpret / jnp-oracle) lives in ops.py; the
+pure-jnp oracles with identical integer select logic live in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import TOPK_BUCKETS, TOPK_SHIFT
+
+BLK = 1024
+
+
+def _bucket_of(x):
+    """Order-preserving radix bucket of |x| (f32 -> int32 in [0, 512))."""
+    bits = jax.lax.bitcast_convert_type(
+        jnp.abs(x.astype(jnp.float32)), jnp.uint32)
+    return (bits >> TOPK_SHIFT).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused int8 stochastic-rounding round-trip
+# ---------------------------------------------------------------------------
+def _int8_kernel(x_ref, u_ref, s_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = s_ref[0]
+    q = x / scale
+    lo = jnp.floor(q)
+    rnd = lo + (u_ref[...] < (q - lo)).astype(jnp.float32)
+    out_ref[...] = jnp.clip(rnd, -127.0, 127.0) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_roundtrip(x, u, scale, interpret: bool = False):
+    """x: any-shape payload tensor; u: uniforms of the same shape;
+    scale: () or (1,) per-tensor scale (see ref.int8_scale — computed by
+    the caller so kernel and oracle consume one bit-identical value).
+    Returns dequantize(quantize(x)) in f32, shaped like x."""
+    shape = x.shape
+    size = x.size
+    flat = x.reshape(-1)
+    uf = u.reshape(-1).astype(jnp.float32)
+    blk = min(BLK, size)
+    nb = pl.cdiv(size, blk)
+    if size % blk:
+        flat = jnp.pad(flat, (0, nb * blk - size))
+        uf = jnp.pad(uf, (0, nb * blk - size))
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda b: (b, 0)),
+            pl.BlockSpec((1, blk), lambda b: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk), jnp.float32),
+        interpret=interpret,
+    )(flat.reshape(nb, blk), uf.reshape(nb, blk),
+      jnp.asarray(scale, jnp.float32).reshape(1))
+    return out.reshape(-1)[:size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed top-k threshold select
+# ---------------------------------------------------------------------------
+def _hist_kernel(x_ref, out_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bucket = _bucket_of(x_ref[...])  # (1, blk)
+    ids = jax.lax.broadcasted_iota(
+        jnp.int32, (TOPK_BUCKETS, bucket.shape[-1]), 0)
+    out_ref[...] += jnp.sum((bucket == ids).astype(jnp.int32), axis=1)
+
+
+def _select_kernel(x_ref, t_ref, need_ref, out_ref, seen_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        seen_ref[0] = 0
+
+    x = x_ref[...]
+    bucket = _bucket_of(x)
+    tie = (bucket == t_ref[0]).astype(jnp.int32)
+    # exclusive global index-order rank among tie-bucket elements
+    rank = seen_ref[0] + jnp.cumsum(tie, axis=-1) - tie
+    keep = (bucket > t_ref[0]) | ((tie == 1) & (rank < need_ref[0]))
+    out_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    seen_ref[0] += jnp.sum(tie)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_select(flat, k, interpret: bool = False):
+    """Zero all but the ``k`` largest-|x| entries of a 1-D payload.
+
+    Ties on the threshold bucket break by index order (lowest index
+    wins), so exactly ``k`` coordinates survive for any 1 <= k <= n."""
+    size = flat.size
+    blk = min(BLK, size)
+    nb = pl.cdiv(size, blk)
+    x = flat
+    if size % blk:
+        # padded zeros land in bucket 0 *after* every real element in
+        # index order, and need <= count(real bucket-0) whenever k <= n,
+        # so padding can neither shift the threshold nor get selected
+        x = jnp.pad(x, (0, nb * blk - size))
+    x2 = x.reshape(nb, blk)
+
+    hist = pl.pallas_call(
+        _hist_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((TOPK_BUCKETS,), lambda b: (0,)),
+        out_shape=jax.ShapeDtypeStruct((TOPK_BUCKETS,), jnp.int32),
+        interpret=interpret,
+    )(x2)
+
+    # threshold bucket: coarsest t whose suffix count still reaches k
+    k = jnp.asarray(k, jnp.int32)
+    ge = jnp.cumsum(hist[::-1])[::-1]  # ge[t] = count(bucket >= t)
+    t = jnp.max(jnp.where(
+        ge >= k, jnp.arange(TOPK_BUCKETS, dtype=jnp.int32), 0))
+    need = k - (ge[t] - hist[t])       # tie-bucket quota
+
+    out = pl.pallas_call(
+        _select_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda b: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk), flat.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x2, t.reshape(1), need.reshape(1))
+    return out.reshape(-1)[:size]

@@ -44,8 +44,16 @@ def fim_diag(grads, old_diag, ema, interpret: bool = False):
     bb = min(B_BLK, B)
     nd = pl.cdiv(D, db)
     nb = pl.cdiv(B, bb)
+    # zero-pad tail tiles explicitly (as vlbfgs.gram does): padded rows
+    # add 0 to the g² sum (the mean still divides by the true B) and the
+    # padded diag tail is sliced off below
+    if B % bb or D % db:
+        grads = jnp.pad(grads, ((0, nb * bb - B), (0, nd * db - D)))
+    old_diag = old_diag.astype(jnp.float32)
+    if D % db:
+        old_diag = jnp.pad(old_diag, (0, nd * db - D))
     ema = jnp.asarray(ema, jnp.float32).reshape(1)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, nb=nb, batch=B),
         grid=(nd, nb),
         in_specs=[
@@ -54,6 +62,7 @@ def fim_diag(grads, old_diag, ema, interpret: bool = False):
             pl.BlockSpec((1,), lambda d, b: (0,)),
         ],
         out_specs=pl.BlockSpec((db,), lambda d, b: (d,)),
-        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nd * db,), jnp.float32),
         interpret=interpret,
-    )(grads, old_diag.astype(jnp.float32), ema)
+    )(grads, old_diag, ema)
+    return out[:D]

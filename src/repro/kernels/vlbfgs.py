@@ -22,7 +22,7 @@ from jax.experimental import pallas as pl
 D_BLK = 4096
 
 
-def _kernel(basis_ref, out_ref, *, nd: int):
+def _kernel(basis_ref, out_ref):
     d = pl.program_id(0)
 
     @pl.when(d == 0)
@@ -47,7 +47,7 @@ def gram(basis, interpret: bool = False):
         padded = nd * db
         basis = jnp.pad(basis, ((0, 0), (0, padded - D)))
     return pl.pallas_call(
-        functools.partial(_kernel, nd=nd),
+        _kernel,
         grid=(nd,),
         in_specs=[pl.BlockSpec((n, db), lambda d: (0, d))],
         out_specs=pl.BlockSpec((n, n), lambda d: (0, 0)),

@@ -201,6 +201,84 @@ def test_sparsifier_error_feedback_unbiased_in_the_long_run(seed):
                 float(np.abs(x).max()) * (1.0 / codec.ratio + 1.0)
 
 
+# ------------------------------------------------- empty-payload regression
+@pytest.mark.parametrize("spec", ["topk:0.1", "randk:0.1"])
+def test_empty_payload_is_a_zero_element_noop(spec):
+    """Regression: _k(0) used to return 1, contradicting wire_bytes(0)
+    == 0 and crashing jax.lax.top_k on a zero-size array.  An empty
+    payload must round-trip as a zero-element no-op."""
+    codec = codecs.make(spec)
+    assert codec._k(0) == 0
+    assert codec.wire_bytes(0) == 0.0
+    empty = {"w": jnp.zeros((0,)), "deep": {"b": jnp.zeros((0, 3))}}
+    sent, res = codec.roundtrip(empty, jax.random.PRNGKey(0))
+    assert jax.tree_util.tree_structure(sent) == \
+        jax.tree_util.tree_structure(empty)
+    for leaf_s, leaf_e in zip(jax.tree.leaves(sent), jax.tree.leaves(empty),
+                              strict=True):
+        assert leaf_s.shape == leaf_e.shape
+    for leaf in jax.tree.leaves(res):
+        assert leaf.size == 0
+    # nonempty payloads still keep at least one coordinate
+    assert codec._k(1) == 1 and codec._k(3) == 1
+
+
+# ------------------------------------ kernel fast path == registry oracle
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_topk_kernel_path_bit_consistent_with_oracle(seed):
+    """Property (acceptance): the fused top-k kernel and the registry
+    oracle agree bit-for-bit on kept index sets, billed bytes, and
+    error-feedback residuals — plan==ledger can't depend on the knob."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 200))
+    tree = {"w": jnp.asarray(rng.normal(0, 3.0, n).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(0, 0.1, 7).astype(np.float32))}
+    key = jax.random.PRNGKey(seed)
+    on = codecs.make("topk:0.2", kernels="on")
+    off = codecs.make("topk:0.2", kernels="off")
+    sent_on, res_on = on.roundtrip(tree, key)
+    sent_off, res_off = off.roundtrip(tree, key)
+    for a, b in zip(jax.tree.leaves(sent_on), jax.tree.leaves(sent_off),
+                    strict=True):
+        assert bool(jnp.all(a == b))  # identical kept sets AND values
+    for a, b in zip(jax.tree.leaves(res_on), jax.tree.leaves(res_off),
+                    strict=True):
+        assert bool(jnp.all(a == b))  # identical EF residuals
+    kept = sum(int((np.asarray(leaf) != 0).sum())
+               for leaf in jax.tree.leaves(sent_on))
+    assert kept == math.ceil(0.2 * (n + 7))  # == billed wire elements
+    assert on.wire_bytes(n + 7) == math.ceil(0.2 * (n + 7)) * 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_int8_kernel_path_bit_consistent_with_oracle(seed):
+    """Property (acceptance): the fused int8 kernel reproduces the
+    registry oracle (and the historical quantize/dequantize_tree pair)
+    bit-for-bit under the shared uniform stream."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(rng.normal(0, 2.0, 130).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(0, 5.0, (3, 5)).astype(np.float32))}
+    key = jax.random.PRNGKey(seed)
+    on, _ = codecs.make("int8", kernels="on").roundtrip(tree, key)
+    off, _ = codecs.make("int8", kernels="off").roundtrip(tree, key)
+    legacy = codecs.dequantize_tree(*codecs.quantize_tree(tree, key))
+    for a, b, c in zip(jax.tree.leaves(on), jax.tree.leaves(off),
+                       jax.tree.leaves(legacy), strict=True):
+        assert bool(jnp.all(a == b))
+        assert bool(jnp.all(a == c))
+
+
+def test_make_kernels_knob_validation():
+    assert codecs.make("topk:0.1").kernels == "auto"
+    assert codecs.make("int8", kernels="on").kernels == "on"
+    with pytest.raises(ValueError, match="kernels mode"):
+        codecs.make("int8", kernels="fast")
+    with pytest.raises(ValueError, match="kernels"):
+        FedConfig(kernels="fast")
+
+
 # ------------------------------------------- the int8 no-op regression (bug)
 @pytest.mark.parametrize("alg", ALL_ALGS)
 def test_int8_shrinks_ledger_for_every_strategy(alg):

@@ -8,7 +8,10 @@ import pytest
 from repro.kernels import ops, ref
 
 
-@pytest.mark.parametrize("B,D", [(8, 256), (64, 1000), (256, 4096), (5, 131)])
+# (300, 3000) / (300, 5000): true multi-block tails on BOTH grid axes
+# (B % B_BLK and D % D_BLK nonzero) — the tail-tile leak regression
+@pytest.mark.parametrize("B,D", [(8, 256), (64, 1000), (256, 4096), (5, 131),
+                                 (300, 3000), (300, 5000), (257, 2049)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fim_diag_kernel(B, D, dtype):
     key = jax.random.PRNGKey(B * D)
@@ -21,7 +24,8 @@ def test_fim_diag_kernel(B, D, dtype):
                                rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("n,D", [(5, 512), (21, 4096), (21, 10_001), (9, 64)])
+@pytest.mark.parametrize("n,D", [(5, 512), (21, 4096), (21, 10_001), (9, 64),
+                                 (9, 12_300)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_vlbfgs_gram_kernel(n, D, dtype):
     key = jax.random.PRNGKey(n + D)
@@ -67,6 +71,84 @@ def test_flash_attention_bf16():
                                rtol=5e-2, atol=5e-2)
 
 
+# ------------------------------------------------------- codec kernels
+@pytest.mark.parametrize("shape", [(7,), (1000,), (33, 129), (4096,),
+                                   (300, 17)])
+def test_int8_roundtrip_kernel_bit_identical_to_oracle(shape):
+    """The fused int8 kernel and the jnp oracle consume the same uniform
+    draws, so they must agree bit-for-bit (not allclose)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(int(np.prod(shape))))
+    x = jax.random.normal(k1, shape) * 3.0
+    u = jax.random.uniform(k2, shape)
+    from repro.kernels import codec_ops
+    scale = ref.int8_scale(x)
+    out_k = codec_ops.int8_roundtrip(x, u, scale, interpret=True)
+    out_r = ref.int8_roundtrip_ref(x, u, scale)
+    assert out_k.shape == x.shape
+    assert bool(jnp.all(out_k == out_r))
+
+
+@pytest.mark.parametrize("n,k", [(8, 2), (35, 4), (1000, 100), (5000, 1),
+                                 (2048, 2048), (1537, 700), (1024, 1)])
+def test_topk_select_kernel_bit_identical_to_oracle(n, k):
+    """Histogram + threshold-select kernel vs the jnp oracle: identical
+    integer bucket logic, so keep masks match bit-for-bit and exactly k
+    coordinates survive (the wire_bytes billing invariant)."""
+    flat = jax.random.normal(jax.random.PRNGKey(n + k), (n,))
+    from repro.kernels import codec_ops
+    out_k = codec_ops.topk_select(flat, k, interpret=True)
+    out_r = ref.topk_select_ref(flat, k)
+    assert bool(jnp.all(out_k == out_r))
+    assert int(jnp.sum(out_k != 0)) == k
+    # magnitude correctness: every kept |x| dominates every dropped |x|
+    # up to the radix tie band (< 1.5x by construction)
+    absx = jnp.abs(flat)
+    kept = out_k != 0
+    mn_kept = float(jnp.min(jnp.where(kept, absx, jnp.inf)))
+    mx_drop = float(jnp.max(jnp.where(kept, -jnp.inf, absx))) if k < n else 0.0
+    assert mn_kept * 1.5 >= mx_drop
+
+
+def test_topk_select_handles_threshold_ties():
+    """Duplicate magnitudes on the threshold bucket break by index order
+    — still exactly k kept, and kernel == oracle on the chosen set."""
+    from repro.kernels import codec_ops
+    flat = jnp.asarray([3.0, -1.0, 1.0, 1.0, -3.0, 1.0, 0.5, -1.0])
+    for k in (1, 2, 3, 4, 5, 8):
+        out_k = codec_ops.topk_select(flat, k, interpret=True)
+        out_r = ref.topk_select_ref(flat, k)
+        assert bool(jnp.all(out_k == out_r)), k
+        assert int(jnp.sum(out_k != 0)) == k
+
+
+def test_topk_select_matches_sort_semantics():
+    """On distinct magnitudes the bucketed select must reproduce the
+    exact jax.lax.top_k set whenever no two survivors share the
+    threshold bucket — checked here with well-separated values."""
+    vals = jnp.asarray([1.0, -8.0, 0.5, 3.0, -0.1, 0.2, 6.0, -2.0])
+    got = ref.topk_select_ref(vals, 2)
+    np.testing.assert_allclose(np.asarray(got),
+                               [0.0, -8.0, 0, 0, 0, 0, 6.0, 0])
+
+
+def test_ops_mode_dispatch():
+    """mode knob semantics off-TPU: "off"/"auto" -> oracle, "on" ->
+    interpret kernel; force_kernel stays an alias for "on"."""
+    assert ops.resolve("off") == "oracle"
+    assert ops.resolve("auto") == "oracle"  # CPU container
+    assert ops.resolve("on") == "interpret"
+    assert ops.resolve("auto", force_kernel=True) == "interpret"
+    with pytest.raises(ValueError, match="kernels mode"):
+        ops.resolve("sometimes")
+    x = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    key = jax.random.PRNGKey(1)
+    for mode in ("auto", "on", "off"):
+        assert bool(jnp.all(ops.int8_roundtrip(x, key, mode=mode)
+                            == ops.int8_roundtrip(x, key, mode="off")))
+        assert bool(jnp.all(ops.topk_select(x, 31, mode=mode)
+                            == ops.topk_select(x, 31, mode="off")))
+
+
 def test_gram_kernel_feeds_lbfgs_identically():
     """End-to-end: a direction computed from the kernel Gram equals the
     pure-jnp one (the optimizer consumes either interchangeably)."""
@@ -87,3 +169,50 @@ def test_gram_kernel_feeds_lbfgs_identically():
     M_ref = lbfgs.gram_matrix(h, g)
     np.testing.assert_allclose(np.asarray(M_kernel), np.asarray(M_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------- convergence fingerprint
+def test_fim_lbfgs_convergence_fingerprint_invariant_under_kernels():
+    """Routing the client Fisher diagonal and the server Gram matrix
+    through the Pallas ops must not move the optimizer's trajectory:
+    kernels="on" (interpret kernels everywhere) and kernels="off" (the
+    historical pure-jnp path) produce the same iterates to f32 tolerance
+    on a deterministic quadratic."""
+    from repro.core import fim_lbfgs
+    from repro.fed import client as fed_client
+
+    rng = np.random.default_rng(7)
+    d = 300
+    target = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    curv = jnp.asarray(rng.uniform(0.5, 2.0, size=d).astype(np.float32))
+
+    def loss_fn(params, batch):
+        r = (params["w"] - target) * batch["x"][:, None]
+        return jnp.mean(jnp.sum(curv * r * r, axis=1))
+
+    def per_example_loss(params, x, y):
+        r = (params["w"] - target) * x
+        return jnp.sum(curv * r * r)
+
+    batch = {"x": jnp.ones((8,)), "y": jnp.zeros((8,), jnp.int32)}
+
+    def run(kernels: str):
+        grad_fim = fed_client.make_grad_fim_fn(
+            loss_fn, per_example_loss, "per_example", kernels=kernels)
+        cfg = fim_lbfgs.FimLbfgsConfig(learning_rate=0.3, m=4,
+                                       kernels=kernels)
+        params = {"w": jnp.zeros((d,), jnp.float32)}
+        state = fim_lbfgs.init(params, cfg)
+        losses = []
+        for _ in range(8):
+            g, diag, loss = grad_fim(params, batch)
+            params, state, _ = fim_lbfgs.update(state, params, g, diag, cfg)
+            losses.append(float(loss))
+        return params, losses
+
+    p_off, l_off = run("off")
+    p_on, l_on = run("on")
+    assert l_off[-1] < l_off[0]  # it actually converges
+    np.testing.assert_allclose(l_on, l_off, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_on["w"]), np.asarray(p_off["w"]),
+                               rtol=1e-4, atol=1e-5)
